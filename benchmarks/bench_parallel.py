@@ -1,0 +1,60 @@
+"""Paper Figure 6 / §6.1: parallel scaling.
+
+The paper parallelizes row-chunk operations with OpenMP threads. The TPU
+mapping of that claim is the data axis of the mesh: batch queries shard
+embarrassingly (DESIGN.md §2). On this 1-core CPU container we measure the
+amortization curve instead — per-query latency vs batch size — which is the
+same economics (fixed per-call overhead + chunk reuse amortized across the
+batch, paper §4's chunk-ordering amortization), and verify the MSCM-vs-
+vanilla gap persists at every batch size as Fig. 6 shows for every thread
+count. The sharded-inference path itself is exercised in
+tests/test_distributed_xmr.py on an 8-device host mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import build_benchmark_tree, csv_line, ell_queries, time_fn
+from repro.data.xmr_data import PAPER_SHAPES, scaled_shape
+
+
+def run(ds: str = "amazon-670k", *, branching=32, batches=(1, 4, 16, 64, 256),
+        max_labels=65_536, seed=0) -> List[str]:
+    shape = PAPER_SHAPES[ds]
+    if shape.L > max_labels:
+        shape = scaled_shape(shape, max_labels / shape.L)
+    rng = np.random.default_rng(seed)
+    tree = build_benchmark_tree(shape, branching, rng)
+    lines = []
+    for n in batches:
+        xi, xv = ell_queries(shape, n, rng, width=256)
+        per = {}
+        for method in ("vanilla", "mscm_dense"):
+            t = time_fn(lambda m=method: tree.infer(xi, xv, beam=10, topk=10,
+                                                    method=m))
+            per[method] = 1e6 * t / n
+            lines.append(csv_line(f"{ds}/batch{n}/{method}", per[method],
+                                  f"batch={n}"))
+        lines.append(csv_line(
+            f"{ds}/batch{n}/speedup", 0.0,
+            f"mscm_vs_vanilla={per['vanilla'] / per['mscm_dense']:.2f}x"))
+    return lines
+
+
+def main(argv=None) -> List[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="amazon-670k")
+    ap.add_argument("--batches", nargs="*", type=int, default=[1, 4, 16, 64])
+    args = ap.parse_args(argv)
+    lines = run(args.dataset, batches=tuple(args.batches))
+    for l in lines:
+        print(l)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json, prints the per-cell three-term roofline,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and flags the three most
+interesting hillclimb cells (worst roofline fraction / most collective-bound
+/ most paper-representative).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_cells(mesh: str = "single") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "arch" in rec:  # skip the enterprise serve record (own schema)
+            cells.append(rec)
+    return cells
+
+
+def fraction_of_roofline(cell: Dict) -> float:
+    """MODEL_FLOPS-throughput fraction if the step ran at its dominant bound:
+    (model_flops / bound_time) / (chips · peak)."""
+    r = cell.get("roofline", {})
+    bound = r.get("bound_s", 0)
+    if not bound:
+        return 0.0
+    from repro.launch import hw
+
+    return (cell["model_flops"] / bound) / (cell["chips"] * hw.PEAK_FLOPS_BF16)
+
+
+def table(mesh: str = "single") -> str:
+    cells = load_cells(mesh)
+    rows = [
+        "| arch | shape | status | compute_s | memory_s | collective_s | "
+        "dominant | model/HLO flops | roofline frac | mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "ok":
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | {c.get('status')} | - | - | - | - | - | - | - |"
+            )
+            continue
+        r = c["roofline"]
+        ratio = c.get("model_vs_hlo_flops") or 0
+        mem = c.get("memory", {})
+        dev_gb = (mem.get("argument_size_in_bytes", 0)
+                  + mem.get("temp_size_in_bytes", 0)) / 1e9
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | ok | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{ratio:.3f} | {fraction_of_roofline(c):.3f} | {dev_gb:.1f} |"
+        )
+    return "\n".join(rows)
+
+
+def pick_hillclimb_cells(mesh: str = "single") -> Dict[str, Dict]:
+    cells = [c for c in load_cells(mesh) if c.get("status") == "ok"]
+    if not cells:
+        return {}
+    worst = min(cells, key=fraction_of_roofline)
+    coll = max(cells, key=lambda c: c["roofline"]["collective_s"]
+               / max(c["roofline"]["bound_s"], 1e-12))
+    return {
+        "worst_fraction": {"arch": worst["arch"], "shape": worst["shape"],
+                           "frac": fraction_of_roofline(worst)},
+        "most_collective_bound": {"arch": coll["arch"], "shape": coll["shape"],
+                                  "coll_s": coll["roofline"]["collective_s"]},
+        # most representative of the paper: the sparse-ranking serving shape
+        # (decode against a huge output space) on the largest-vocab arch
+        "paper_representative": {"arch": "seamless-m4t-large-v2",
+                                 "shape": "decode_32k",
+                                 "why": "256k-label output ranking at decode"},
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args(argv)
+    print(table(args.mesh))
+    print()
+    print("hillclimb candidates:", json.dumps(pick_hillclimb_cells(args.mesh), indent=1))
+
+
+if __name__ == "__main__":
+    main()

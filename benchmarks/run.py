@@ -1,0 +1,64 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Fast defaults; per-table flags via
+``python -m benchmarks.bench_<name> --help``.
+
+  Tables 1-3 / Figs 3-4  -> bench_mscm       (datasets × branching × setting)
+  Table 4 / §6           -> bench_enterprise (d=4M, 1M-label tree geometry)
+  Figure 5               -> bench_napkin     (per-column ref vs MSCM)
+  Figure 6 / §6.1        -> bench_parallel   (batch-amortization analogue)
+  beyond-paper           -> bench_xmr_head   (MSCM vocab-tree LM head)
+  §Roofline              -> roofline         (dry-run derived, no timing)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow; default is CI-size)")
+    ap.add_argument("--skip-enterprise", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_enterprise, bench_mscm, bench_napkin,
+                            bench_parallel, bench_xmr_head)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    if args.full:
+        mscm_kw = dict(
+            datasets=list(__import__("repro.data", fromlist=["PAPER_SHAPES"])
+                          .PAPER_SHAPES.keys()),
+            max_labels=262_144, n_batch=256,
+        )
+    else:
+        mscm_kw = dict(datasets=["eurlex-4k", "wiki10-31k", "amazon-670k"],
+                       max_labels=32_768, n_batch=64)
+    for line in bench_mscm.run(mscm_kw["datasets"],
+                               max_labels=mscm_kw["max_labels"],
+                               n_batch=mscm_kw["n_batch"]):
+        print(line, flush=True)
+    for line in bench_mscm.profile_share():
+        print(line, flush=True)
+    for line in bench_napkin.run(max_labels=mscm_kw["max_labels"]):
+        print(line, flush=True)
+    for line in bench_parallel.run(max_labels=mscm_kw["max_labels"],
+                                   batches=(1, 4, 16, 64)):
+        print(line, flush=True)
+    for line in bench_xmr_head.run():
+        print(line, flush=True)
+    if not args.skip_enterprise:
+        for line in bench_enterprise.run(n_queries=16 if not args.full else 64):
+            print(line, flush=True)
+
+    print(f"# total bench time {time.time() - t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro — MSCM (WWW'22) XMR-tree serving + multi-pod JAX LM framework."""
+
+__version__ = "0.1.0"

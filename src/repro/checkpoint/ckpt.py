@@ -1,0 +1,140 @@
+"""Mesh-independent checkpointing: logical arrays + manifest, async, atomic.
+
+Format: a directory per step containing one ``.npy`` per pytree leaf (keyed
+by its flattened path) plus ``manifest.json`` (treedef, step, metadata).
+Because leaves are stored as full *logical* arrays, a checkpoint written on a
+16×16 mesh restores onto any other device count — the elastic-restart path.
+
+Writes are atomic (tmp dir + rename) and optionally asynchronous (a snapshot
+is device_get'd on the step path, the file I/O happens on a worker thread),
+keeping the training loop's exposed cost to the host copy only.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+def _flatten(tree: Params) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _treedef_of(tree: Params):
+    return jax.tree_util.tree_structure(tree)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ---------------------------------------------------------
+    def save(self, step: int, state: Dict[str, Params],
+             metadata: Optional[dict] = None) -> None:
+        """state: dict of named pytrees (e.g. {'params':…, 'opt':…})."""
+        snap = {name: _flatten(tree) for name, tree in state.items()}
+        meta = {
+            "step": int(step),
+            "names": {n: sorted(v.keys()) for n, v in snap.items()},
+            "metadata": metadata or {},
+        }
+        self.wait()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, snap, meta), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, snap, meta)
+
+    def _write(self, step: int, snap, meta) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for name, leaves in snap.items():
+            sub = os.path.join(tmp, name)
+            os.makedirs(sub)
+            for key, arr in leaves.items():
+                fn = key.replace("/", "__") + ".npy"
+                np.save(os.path.join(sub, fn), arr)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"), ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    # -- read ----------------------------------------------------------
+    def list_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Dict[str, Params], step: Optional[int] = None,
+                sharding: Optional[Dict[str, Params]] = None
+                ) -> Tuple[int, Dict[str, Params]]:
+        """Restore into the *structure* of ``template`` (values replaced).
+
+        ``sharding``: optional dict of sharding pytrees — leaves are
+        device_put with the target sharding, which is how a checkpoint
+        written on one mesh restores onto another (elastic restart).
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        base = os.path.join(self.dir, f"step_{step:08d}")
+        out: Dict[str, Params] = {}
+        for name, tree in template.items():
+            paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+            treedef = jax.tree_util.tree_structure(tree)
+            shard_leaves = (
+                jax.tree.leaves(sharding[name]) if sharding and name in sharding
+                else [None] * len(paths)
+            )
+            leaves = []
+            for (path, leaf), shd in zip(paths, shard_leaves):
+                key = "/".join(
+                    str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+                )
+                arr = np.load(os.path.join(base, name, key.replace("/", "__") + ".npy"))
+                val = jax.device_put(arr, shd) if shd is not None else jax.numpy.asarray(arr)
+                leaves.append(val.astype(leaf.dtype) if hasattr(leaf, "dtype") else val)
+            out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+        return step, out

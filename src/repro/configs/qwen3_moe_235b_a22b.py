@@ -1,0 +1,14 @@
+"""Qwen3-MoE-235B-A22B: 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B; hf].
+
+Adafactor optimizer (factored 2nd moment) so optimizer state fits v5e HBM
+at 256 chips — see DESIGN.md §6.
+"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, head_dim=128,
+    d_ff=1536, vocab=151936,
+    n_experts=128, experts_per_token=8, moe_d_ff=1536,
+    optimizer="adafactor",
+)

@@ -1,0 +1,10 @@
+from repro.core.chunked import ChunkedLayer, ColumnELLLayer
+from repro.core.tree import METHODS, TreeLayerArrays, XMRTree
+
+__all__ = [
+    "ChunkedLayer",
+    "ColumnELLLayer",
+    "XMRTree",
+    "TreeLayerArrays",
+    "METHODS",
+]

@@ -1,0 +1,59 @@
+"""Beam search over the label tree (paper Alg. 1, lines 5-9).
+
+Static shapes throughout: beam width, branching factor, and layer sizes are
+compile-time constants, so the whole search jits cleanly and the active-block
+lists handed to MSCM are fixed-size `[n·b]` vectors.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def combine_scores(
+    parent_scores: jax.Array,  # [n, b]  (prob or log-prob, see mode)
+    logits: jax.Array,         # [n, b, B] ranker activations (pre-sigmoid)
+    mode: str = "prod",
+) -> jax.Array:
+    """Conditional combine (paper eq. 5): child = σ(logit) ⊗ parent.
+
+    ``prod``  — probability space, exactly the paper's formulation.
+    ``logsum`` — log space (numerically safer for deep trees); rankings are
+    identical because log is monotone.
+    """
+    if mode == "prod":
+        return jax.nn.sigmoid(logits) * parent_scores[..., None]
+    if mode == "logsum":
+        return jax.nn.log_sigmoid(logits) + parent_scores[..., None]
+    raise ValueError(f"unknown score mode {mode}")
+
+
+def beam_step(
+    parent_ids: jax.Array,     # int32 [n, b]
+    parent_scores: jax.Array,  # f32 [n, b]
+    logits: jax.Array,         # f32 [n, b, B]
+    n_cols: int,               # valid columns at this level (masks padding)
+    next_b: int,
+    *,
+    mode: str = "prod",
+) -> Tuple[jax.Array, jax.Array]:
+    """SelectTop_b over the expanded beam (paper Alg. 1 line 9).
+
+    Children ids are parent*B + within-chunk offset; phantom columns from
+    chunk padding (id >= n_cols) are masked to -inf so they never survive.
+    """
+    n, b, B = logits.shape
+    scores = combine_scores(parent_scores, logits, mode)              # [n,b,B]
+    child_ids = parent_ids[:, :, None] * B + jnp.arange(B)[None, None, :]
+    valid = child_ids < n_cols
+    scores = jnp.where(valid, scores, NEG_INF)
+    flat_scores = scores.reshape(n, b * B)
+    flat_ids = child_ids.reshape(n, b * B)
+    top_scores, top_pos = jax.lax.top_k(flat_scores, next_b)          # [n, nb]
+    top_ids = jnp.take_along_axis(flat_ids, top_pos, axis=1)
+    return top_ids.astype(jnp.int32), top_scores

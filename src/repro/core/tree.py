@@ -1,0 +1,208 @@
+"""XMR tree model + beam-search inference (paper §3, Algorithm 1).
+
+An :class:`XMRTree` holds one :class:`~repro.core.chunked.ChunkedLayer` per
+tree level (plus the vanilla per-column layout for the baseline method) as
+device arrays. ``infer`` runs the full beam search; the per-level masked
+matmul dispatches to any of the MSCM variants or the Pallas kernels, and all
+of them return *identical* rankings — the paper's "free of charge" property,
+pinned by tests.
+
+Label layout convention: nodes at level l are numbered so that the children
+of node p are [p*B, (p+1)*B) at level l+1 — chunk id == parent id, which is
+what makes the beam's active-block list trivially static-shaped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mscm as mscm_lib
+from repro.core.beam import beam_step
+from repro.core.chunked import ChunkedLayer, ColumnELLLayer
+from repro.sparse.csr import CSC
+
+METHODS = (
+    "vanilla",            # paper Alg. 4 baseline: per-column sparse dots
+    "mscm_dense",         # dense-lookup MSCM (paper item 4)
+    "mscm_searchsorted",  # binary-search MSCM (paper item 2)
+    "mscm_pallas",        # Pallas kernel (fused or pregather by d)
+    "mscm_pallas_pregather",
+)
+
+
+@dataclasses.dataclass
+class TreeLayerArrays:
+    """Device-resident tensors for one level (a pytree)."""
+
+    chunk_rows: jax.Array  # int32 [C, R]
+    chunk_vals: jax.Array  # f32 [C, R, B]
+    col_rows: jax.Array    # int32 [L, Rc] (vanilla baseline layout)
+    col_vals: jax.Array    # f32 [L, Rc]
+
+
+jax.tree_util.register_dataclass(
+    TreeLayerArrays,
+    data_fields=["chunk_rows", "chunk_vals", "col_rows", "col_vals"],
+    meta_fields=[],
+)
+
+
+@dataclasses.dataclass
+class XMRTree:
+    layers: List[TreeLayerArrays]
+    n_cols: Tuple[int, ...]     # true (unpadded) label count per level
+    branching: Tuple[int, ...]  # B per level
+    d: int
+
+    @property
+    def depth(self) -> int:
+        return len(self.layers)
+
+    @property
+    def n_labels(self) -> int:
+        return self.n_cols[-1]
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_weight_matrices(
+        cls, weights: Sequence[CSC], branching: int | Sequence[int]
+    ) -> "XMRTree":
+        """Build from per-level CSC weight matrices W^(l), l = 2..depth.
+
+        ``weights[i]`` scores the nodes of level i+2; level sizes must follow
+        the chunk layout: L_{l+1} chunks == L_l columns (ragged trees are
+        padded by the converters)."""
+        bs = (
+            [int(branching)] * len(weights)
+            if np.isscalar(branching)
+            else [int(b) for b in branching]
+        )
+        layers, ncols = [], []
+        for w, b in zip(weights, bs):
+            ch = ChunkedLayer.from_csc(w, b)
+            col = ColumnELLLayer.from_csc(w, b)
+            layers.append(
+                TreeLayerArrays(
+                    chunk_rows=jnp.asarray(ch.rows),
+                    chunk_vals=jnp.asarray(ch.vals),
+                    col_rows=jnp.asarray(col.rows),
+                    col_vals=jnp.asarray(col.vals),
+                )
+            )
+            ncols.append(w.shape[1])
+        return cls(layers=layers, n_cols=tuple(ncols), branching=tuple(bs), d=weights[0].shape[0])
+
+    def memory_bytes(self) -> int:
+        tot = 0
+        for l in self.layers:
+            tot += sum(np.asarray(t).nbytes for t in (l.chunk_rows, l.chunk_vals))
+        return tot
+
+    # ------------------------------------------------------------------
+    def infer(
+        self,
+        x_idx: jax.Array,  # int32 [n, Q] sorted, sentinel-padded
+        x_val: jax.Array,  # f32 [n, Q]
+        *,
+        beam: int = 10,
+        topk: int = 10,
+        method: str = "mscm_dense",
+        score_mode: str = "prod",
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Beam-search inference. Returns (scores [n, k], labels [n, k])."""
+        return _tree_infer(
+            tuple(self.layers),
+            self.n_cols,
+            self.branching,
+            self.d,
+            x_idx,
+            x_val,
+            beam=beam,
+            topk=topk,
+            method=method,
+            score_mode=score_mode,
+        )
+
+
+def _masked_matmul(
+    layer: TreeLayerArrays,
+    x_idx: jax.Array,
+    x_val: jax.Array,
+    x_dense: jax.Array | None,
+    block_q: jax.Array,
+    block_c: jax.Array,
+    branching: int,
+    d: int,
+    method: str,
+) -> jax.Array:
+    """Dispatch one level's masked product A = M ⊙ (X W) (paper eq. 6)."""
+    if method == "vanilla":
+        return mscm_lib.vanilla_columns(
+            x_idx, x_val, layer.col_rows, layer.col_vals, block_q, block_c, branching, d
+        )
+    if method == "mscm_dense":
+        return mscm_lib.mscm_dense_lookup(
+            x_dense, layer.chunk_rows, layer.chunk_vals, block_q, block_c
+        )
+    if method == "mscm_searchsorted":
+        return mscm_lib.mscm_searchsorted(
+            x_idx, x_val, layer.chunk_rows, layer.chunk_vals, block_q, block_c, d
+        )
+    if method in ("mscm_pallas", "mscm_pallas_pregather"):
+        from repro.kernels import ops  # local import: kernels are optional
+
+        variant = "pregather" if method.endswith("pregather") else "auto"
+        return ops.mscm_pallas(
+            x_dense, layer.chunk_rows, layer.chunk_vals, block_q, block_c, variant=variant
+        )
+    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_cols", "branching", "d", "beam", "topk", "method", "score_mode"),
+)
+def _tree_infer(
+    layers: Tuple[TreeLayerArrays, ...],
+    n_cols: Tuple[int, ...],
+    branching: Tuple[int, ...],
+    d: int,
+    x_idx: jax.Array,
+    x_val: jax.Array,
+    *,
+    beam: int,
+    topk: int,
+    method: str,
+    score_mode: str,
+) -> Tuple[jax.Array, jax.Array]:
+    n = x_idx.shape[0]
+    needs_dense = method in ("mscm_dense", "mscm_pallas", "mscm_pallas_pregather")
+    x_dense = mscm_lib.scatter_dense(x_idx, x_val, d) if needs_dense else None
+
+    # Layer 1 is the root: prediction 1 (Alg. 1 line 3); its children form
+    # chunk 0 of the first stored level.
+    parent_ids = jnp.zeros((n, 1), jnp.int32)
+    scores = (
+        jnp.ones((n, 1), jnp.float32)
+        if score_mode == "prod"
+        else jnp.zeros((n, 1), jnp.float32)
+    )
+    for li, layer in enumerate(layers):
+        b_cur = parent_ids.shape[1]
+        block_q = jnp.repeat(jnp.arange(n, dtype=jnp.int32), b_cur)
+        block_c = parent_ids.reshape(-1)
+        logits = _masked_matmul(
+            layer, x_idx, x_val, x_dense, block_q, block_c, branching[li], d, method
+        ).reshape(n, b_cur, branching[li])
+        is_last = li == len(layers) - 1
+        next_b = min(topk if is_last else beam, n_cols[li])
+        parent_ids, scores = beam_step(
+            parent_ids, scores, logits, n_cols[li], next_b, mode=score_mode
+        )
+    return scores, parent_ids

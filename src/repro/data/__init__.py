@@ -1,0 +1,10 @@
+from repro.data.xmr_data import (
+    ENTERPRISE_SHAPE,
+    PAPER_SHAPES,
+    XMRDataset,
+    XMRShape,
+    benchmark_queries,
+    load_svmlight_xmr,
+    scaled_shape,
+    synthetic_labeled_dataset,
+)

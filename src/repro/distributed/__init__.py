@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (
+    batch_specs,
+    cache_specs,
+    param_spec,
+    shard_params,
+)
+from repro.distributed.fault import StepWatchdog, TransientError, run_with_retries

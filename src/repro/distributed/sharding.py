@@ -1,0 +1,193 @@
+"""Rule-based parameter/activation sharding with divisibility fallback.
+
+The mesh is ("data", "model") single-pod or ("pod", "data", "model")
+multi-pod. Policy (DESIGN.md §6):
+
+* batch/token dims           -> all data-parallel axes ("pod","data")
+* output-feature dims (heads, ffn-out-of-d, vocab, experts) -> "model" (TP)
+* the complementary feature dim -> "data" (FSDP within pod)
+* stacked-layer leading dim  -> never sharded (lax.scan axis)
+* 1-D tensors (norm scales)  -> replicated
+* every assignment checks divisibility and falls back down the preference
+  list; undivisible dims end up replicated rather than erroring.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _assign(shape: Sequence[int], prefs: List[Tuple[int, Any]], mesh: Mesh) -> P:
+    """prefs: [(dim, axis-or-tuple)] in priority order; skip non-divisible."""
+    spec: List[Any] = [None] * len(shape)
+    used = set()
+    for dim, ax in prefs:
+        d = dim if dim >= 0 else len(shape) + dim
+        if d < 0 or d >= len(shape) or spec[d] is not None:
+            continue
+        key = tuple(ax) if isinstance(ax, tuple) else (ax,)
+        if any(k in used for k in key):
+            continue
+        if shape[d] % axis_size(mesh, ax) == 0 and shape[d] >= axis_size(mesh, ax):
+            spec[d] = ax
+            used.update(key)
+    return P(*spec)
+
+
+# name-pattern rules: (regex, fn(shape, mesh, n_leading) -> P)
+def _param_rules(mesh: Mesh):
+    da = data_axes(mesh)
+    fsdp = "data" if "data" in mesh.axis_names else None
+
+    def embed(shape, lead):
+        return _assign(shape, [(0 + lead, "model"), (1 + lead, fsdp)], mesh)
+
+    def head_out(shape, lead):  # [d, H*dh] / [d, ff]-style: out dim -> model
+        return _assign(shape, [(-1, "model"), (-2, fsdp)], mesh)
+
+    def head_in(shape, lead):   # [H*dh, d] / [ff, d]-style: in dim -> model
+        return _assign(shape, [(-2, "model"), (-1, fsdp)], mesh)
+
+    def experts(shape, lead):   # [E, d, ff] or [E, ff, d]
+        return _assign(shape, [(0 + lead, "model"), (1 + lead, fsdp), (2 + lead, None)], mesh)
+
+    return [
+        (re.compile(r"embed$"), embed),
+        (re.compile(r"lm_head$"), head_out),
+        (re.compile(r"(wq|wk|wv|w1|w3|wuq|wukv|wdq|wdkv|wx|wB|wC|wdt|router|ddw1|ww1|wkr)$"), head_out),
+        (re.compile(r"(wo|w2|wr|wg|ww2|ddw2)$"), head_in),
+        (re.compile(r"ffn/(w1|w3)$"), head_out),
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec(path: str, shape: Sequence[int], mesh: Mesh, *,
+               stacked: bool = True) -> P:
+    """PartitionSpec for one parameter tensor."""
+    if len(shape) <= 1:
+        return P()
+    lead = 1 if (stacked and "layers" in path and len(shape) >= 2) else 0
+    name = path.split("/")[-1]
+    # MoE expert tensors: [L, E, d, ff]. Prefer experts over 'model'
+    # (qwen3: 128/16); when E does not divide the TP axis (grok: 8 < 16)
+    # shard BOTH feature dims instead so the 1.2TB weight still spreads
+    # over all 256 chips (d -> data, ff -> model for w1/w3; mirrored for w2).
+    if re.search(r"ffn/(w1|w2|w3)$", path) and len(shape) - lead == 3:
+        fsdp = "data" if "data" in mesh.axis_names else None
+        e_dim = shape[lead]
+        if e_dim % axis_size(mesh, "model") == 0 and e_dim >= axis_size(mesh, "model"):
+            return _assign(
+                shape,
+                [(0 + lead, "model"), (1 + lead, fsdp), (2 + lead, None)],
+                mesh,
+            )
+        return _assign(
+            shape,
+            [(2 + lead, "model"), (1 + lead, fsdp)],
+            mesh,
+        )
+    for rx, fn in _param_rules(mesh):
+        if rx.search(path):
+            return fn(shape, lead)
+    # generic fallback: shard the largest trailing dim on model, next on data
+    fsdp = "data" if "data" in mesh.axis_names else None
+    dims = sorted(range(lead, len(shape)), key=lambda i: -shape[i])
+    prefs = []
+    if dims:
+        prefs.append((dims[0], "model"))
+    if len(dims) > 1:
+        prefs.append((dims[1], fsdp))
+    return _assign(shape, prefs, mesh)
+
+
+def shard_params(params_shapes: Params, mesh: Mesh) -> Params:
+    """NamedSharding pytree matching a params (or ShapeDtypeStruct) pytree."""
+    def per_leaf(path, leaf):
+        spec = param_spec(_path_str(path), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(per_leaf, params_shapes)
+
+
+def shard_opt_state(opt_shapes: Params, params_shapes: Params, mesh: Mesh) -> Params:
+    """Optimizer state mirrors its parameter's sharding (m/v same shape);
+    factored adafactor rows/cols and scalars replicate on the missing dim."""
+    param_leaves = {tuple(p.shape): param_spec("", p.shape, mesh)
+                    for p in jax.tree.leaves(params_shapes)}
+
+    def per_leaf(path, leaf):
+        ps = _path_str(path)
+        # match m/v by shape against some param; else generic rule
+        spec = param_spec(ps, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(per_leaf, opt_shapes)
+
+
+def batch_specs(cfg, batch_shapes: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """Input shardings: batch dim over all DP axes; embeds also over model=none."""
+    da = data_axes(mesh)
+    dp = da if len(da) > 1 else (da[0] if da else None)
+
+    def per_leaf(leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return NamedSharding(mesh, P())
+        if shape[0] % axis_size(mesh, dp) == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(per_leaf, batch_shapes)
+
+
+def cache_specs(cfg, cache_shapes: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """KV-cache shardings for decode: [L, B, S, ...] -> B over DP axes,
+    S over model (flash-decode style); SSM states shard heads over model."""
+    da = data_axes(mesh)
+    dp = da if len(da) > 1 else (da[0] if da else None)
+    dp_size = axis_size(mesh, dp)
+    model_size = axis_size(mesh, "model") if "model" in mesh.axis_names else 1
+
+    def per_leaf(path, leaf):
+        shape = leaf.shape
+        name = _path_str(path)
+        spec: List[Any] = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % dp_size == 0 and shape[1] >= dp_size:
+            spec[1] = dp  # batch
+        if len(shape) >= 3 and "model" in (mesh.axis_names or ()):
+            # seq dim for kv caches; head dim for ssm states
+            if name in ("k", "v", "ckv", "kr", "cross_k", "cross_v"):
+                if shape[2] % model_size == 0 and shape[2] >= model_size:
+                    spec[2] = "model"
+            elif name in ("tm_s", "ssd_s") and shape[2] % model_size == 0:
+                spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache_shapes)

@@ -1,0 +1,16 @@
+from repro.kernels import ops, ref
+from repro.kernels.mscm_kernel import (
+    group_blocks_by_chunk,
+    mscm_fused,
+    mscm_grouped,
+    mscm_pregather,
+)
+
+__all__ = [
+    "ops",
+    "ref",
+    "mscm_fused",
+    "mscm_pregather",
+    "mscm_grouped",
+    "group_blocks_by_chunk",
+]

@@ -1,0 +1,107 @@
+"""Jitted wrappers around the MSCM Pallas kernels.
+
+On CPU (this container) the kernels run with ``interpret=True`` — the kernel
+body executes in Python for correctness validation; TPU is the compile
+target. ``interpret=None`` auto-detects.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mscm import gather_query_rows
+from repro.kernels.mscm_kernel import (
+    group_blocks_by_chunk,
+    mscm_fused,
+    mscm_grouped,
+    mscm_pregather,
+)
+
+# A dense f32 query row above this many elements does not fit comfortably in
+# VMEM alongside the chunk tile; fall back to the pre-gathered kernel.
+VMEM_ROW_LIMIT = 1 << 20
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def sort_blocks_by_chunk(block_q: jax.Array, block_c: jax.Array):
+    """In-jit chunk-major ordering (paper Alg. 3 line 6-8) + inverse perm."""
+    order = jnp.argsort(block_c, stable=True)
+    return block_q[order], block_c[order], order
+
+
+def unsort(out_sorted: jax.Array, order: jax.Array) -> jax.Array:
+    return jnp.zeros_like(out_sorted).at[order].set(out_sorted)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("variant", "sort", "interpret")
+)
+def mscm_pallas(
+    x_dense: jax.Array,   # f32 [n, Dp]
+    rows: jax.Array,      # int32 [C, R]
+    vals: jax.Array,      # f32 [C, R, B]
+    block_q: jax.Array,   # int32 [A]
+    block_c: jax.Array,   # int32 [A]
+    *,
+    variant: str = "auto",
+    sort: bool = True,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Masked chunk multiplication via Pallas. Returns f32 [A, B]."""
+    interp = _auto_interpret(interpret)
+    if variant == "auto":
+        variant = "fused" if x_dense.shape[1] <= VMEM_ROW_LIMIT else "pregather"
+    if sort:
+        bq, bc, order = sort_blocks_by_chunk(block_q, block_c)
+    else:
+        bq, bc, order = block_q, block_c, None
+    if variant == "fused":
+        out = mscm_fused(x_dense, rows, vals, bq, bc, interpret=interp)
+    elif variant == "pregather":
+        xg = gather_query_rows(x_dense, rows, bq, bc)
+        out = mscm_pregather(xg, vals, bc, interpret=interp)
+    else:
+        raise ValueError(f"unknown variant {variant}")
+    return unsort(out, order) if order is not None else out
+
+
+def mscm_pallas_grouped(
+    x_dense: jax.Array,
+    rows: jax.Array,
+    vals: jax.Array,
+    block_q: np.ndarray,   # host-side block list (serving batcher owns it)
+    block_c: np.ndarray,
+    *,
+    qt: int = 8,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Batch-mode MXU-tiled MSCM. Host groups blocks per chunk into QT-row
+    tiles; one [QT,R]x[R,B] matmul per tile. Returns f32 [A, B] in the
+    original block order."""
+    interp = _auto_interpret(interpret)
+    tile_chunk, tile_src = group_blocks_by_chunk(np.asarray(block_c), qt)
+    src = jnp.asarray(tile_src)                    # [T, QT]
+    safe_src = jnp.maximum(src, 0)
+    bq = jnp.asarray(block_q)[safe_src]            # [T, QT]
+    bc = jnp.asarray(tile_chunk)[:, None]          # [T, 1]
+    r = rows[jnp.asarray(tile_chunk)]              # [T, R]
+    xg = x_dense[bq[..., None], r[:, None, :]]     # [T, QT, R]
+    xg = jnp.where((src >= 0)[..., None], xg, 0.0)
+    tiles = mscm_grouped(xg, vals, jnp.asarray(tile_chunk), interpret=interp)
+    a = len(block_c)
+    flat_src = src.reshape(-1)
+    flat_tiles = tiles.reshape(-1, vals.shape[2])
+    # Route padding slots (src == -1) to a scratch row one past the end.
+    dest = jnp.where(flat_src >= 0, flat_src, a)
+    out = jnp.zeros((a + 1, vals.shape[2]), jnp.float32)
+    return out.at[dest].set(flat_tiles)[:a]

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+512 placeholder host devices build the production meshes, every step
+function is lowered with its real shardings, ``.compile()`` must succeed,
+and the compiled artifact yields the roofline inputs (FLOPs, bytes,
+collective traffic, per-device memory).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json (one file
+per cell; re-runs skip existing files unless --force).
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, runnable
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.sharding import batch_specs, cache_specs, shard_params
+from repro.launch import hw
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.train import init_opt_state, make_train_step
+from repro.models import lm as lm_lib
+from repro.models.common import ArchConfig
+from repro.optim.optimizers import get_optimizer
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd); N = active params (MoE)."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def _step_and_specs(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    """Build (fn, abstract args, in_shardings) for this cell."""
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        optimizer = get_optimizer(cfg.optimizer)
+        params_s = lm_lib.param_shapes(cfg)
+        opt_s = jax.eval_shape(
+            functools.partial(init_opt_state, optimizer), params_s
+        )
+        fn = make_train_step(cfg, optimizer)
+        args = (params_s, opt_s, specs)
+        shardings = (
+            shard_params(params_s, mesh),
+            shard_params(opt_s, mesh),
+            batch_specs(cfg, specs, mesh),
+        )
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        params_s = lm_lib.param_shapes(cfg)
+
+        def fn(params, batch):
+            return lm_lib.prefill(cfg, params, batch, max_len=shape.seq_len)
+
+        args = (params_s, specs)
+        shardings = (shard_params(params_s, mesh), batch_specs(cfg, specs, mesh))
+        donate = ()
+    else:  # decode
+        params_s = lm_lib.param_shapes(cfg)
+
+        def fn(params, cache, tokens, pos):
+            return lm_lib.decode_step(cfg, params, cache, tokens, pos)
+
+        args = (params_s, specs["cache"], specs["tokens"], specs["pos"])
+        shardings = (
+            shard_params(params_s, mesh),
+            cache_specs(cfg, specs["cache"], mesh),
+            batch_specs(cfg, {"t": specs["tokens"]}, mesh)["t"],
+            None,
+        )
+        donate = (1,)
+    return fn, args, shardings, donate
+
+
+def _memory_analysis_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for field in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if hasattr(ma, field):
+            out[field] = int(getattr(ma, field))
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _compile_once(cfg: ArchConfig, shape: ShapeSpec, mesh, *, want_memory=True):
+    """Lower+compile one configuration; return raw metrics."""
+    fn, args, shardings, donate = _step_and_specs(cfg, shape, mesh)
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        lowered = jax.jit(
+            fn, in_shardings=shardings, donate_argnums=donate
+        ).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = _memory_analysis_dict(compiled) if want_memory else {}
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+    return {
+        "flops": cost.get("flops", 0.0),
+        "bytes": cost.get("bytes accessed", 0.0),
+        "coll_bytes": coll.get("TOTAL", {}).get("operand_bytes", 0.0),
+        "collectives": coll,
+        "memory": mem,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "hlo_size": len(hlo),
+    }
+
+
+def _probe_cfg(cfg: ArchConfig, n_layers: int) -> ArchConfig:
+    import dataclasses
+
+    kw: Dict[str, Any] = {"n_layers": n_layers, "unroll_layers": True}
+    if cfg.family == "encdec":
+        kw["n_enc_layers"] = n_layers
+    return dataclasses.replace(cfg, **kw)
+
+
+def _apply_overrides(cfg: ArchConfig, overrides: Dict[str, Any]) -> ArchConfig:
+    import dataclasses
+
+    if not overrides:
+        return cfg
+    coerced = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            coerced[k] = v in ("1", "true", "True", True)
+        elif isinstance(cur, int):
+            coerced[k] = int(v)
+        elif isinstance(cur, float):
+            coerced[k] = float(v)
+        else:
+            coerced[k] = v
+    return dataclasses.replace(cfg, **coerced)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             overrides: Dict[str, Any] | None = None) -> Dict[str, Any]:
+    cfg = _apply_overrides(get_config(arch), overrides or {})
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "kind": shape.kind, "family": cfg.family,
+    }
+    if not runnable(cfg.family, shape):
+        rec["status"] = "skipped(full-attention)"
+        rec["reason"] = (
+            "long_500k needs a sub-quadratic path; this arch is pure full "
+            "attention (DESIGN.md §Arch-applicability)"
+        )
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+
+    # 1) the REQUIRED artifact: full config must lower + compile.
+    full = _compile_once(cfg, shape, mesh, want_memory=True)
+    print(f"[{arch} {shape_name} {mesh_kind}] memory_analysis:", full["memory"])
+    print(f"[{arch} {shape_name} {mesh_kind}] raw cost_analysis: "
+          f"flops={full['flops']:.3e} bytes={full['bytes']:.3e}")
+
+    # 2) layer-count correction: XLA's HloCostAnalysis counts a while-loop
+    #    (lax.scan) body ONCE. Probe at L=1 and L=2; every per-layer metric is
+    #    linear in L, so corrected = p1 + (L-1)·(p2 - p1). Verified against
+    #    the unrolled small model in tests/test_dryrun_small.py.
+    p1 = _compile_once(_probe_cfg(cfg, 1), shape, mesh, want_memory=False)
+    p2 = _compile_once(_probe_cfg(cfg, 2), shape, mesh, want_memory=False)
+    L = cfg.n_layers
+
+    def corrected(key: str) -> float:
+        body = max(p2[key] - p1[key], 0.0)
+        return p1[key] + (L - 1) * body
+
+    # cost_analysis/memory_analysis describe the per-device SPMD program;
+    # totals for the roofline formula are ×chips.
+    flops_dev = max(corrected("flops"), full["flops"])
+    bytes_dev = max(corrected("bytes"), full["bytes"])
+    coll_dev = max(corrected("coll_bytes"), full["coll_bytes"])
+    flops = flops_dev * chips
+    bytes_hbm = bytes_dev * chips
+    coll_bytes = coll_dev * chips
+    model_flops = _model_flops(cfg, shape)
+    rec.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(full["lower_s"], 2),
+        compile_s=round(full["compile_s"], 2),
+        hlo_flops=flops,
+        hlo_flops_per_device=flops_dev,
+        hlo_bytes=bytes_hbm,
+        hlo_bytes_per_device=bytes_dev,
+        collective_bytes=coll_bytes,
+        collective_bytes_per_device=coll_dev,
+        raw_scan_once={k: full[k] for k in ("flops", "bytes", "coll_bytes")},
+        probe_l1={k: p1[k] for k in ("flops", "bytes", "coll_bytes")},
+        probe_l2={k: p2[k] for k in ("flops", "bytes", "coll_bytes")},
+        collectives=full["collectives"],
+        memory=full["memory"],
+        model_flops=model_flops,
+        model_vs_hlo_flops=(model_flops / flops if flops else None),
+        roofline=hw.roofline_terms(
+            flops=flops, bytes_hbm=bytes_hbm, bytes_collective=coll_bytes,
+            chips=chips,
+        ),
+        hlo_size_chars=full["hlo_size"],
+    )
+    return rec
+
+
+def cell_path(arch: str, shape: str, mesh_kind: str, tag: str = "") -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--override", nargs="*", default=[],
+                    help="ArchConfig overrides k=v (hillclimb lowering)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output json (hillclimb iterations)")
+    args = ap.parse_args()
+
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                path = cell_path(arch, shape, mesh_kind, args.tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"skip existing {path}")
+                    continue
+                print(f"=== {arch} × {shape} × {mesh_kind} ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_kind, overrides)
+                    if overrides:
+                        rec["overrides"] = overrides
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_kind,
+                        "status": "FAILED", "error": str(e),
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    failures.append((arch, shape, mesh_kind, str(e)))
+                    print(f"FAILED: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec.get("status") == "ok":
+                    r = rec["roofline"]
+                    print(
+                        f"ok in {rec['compile_s']:.0f}s  compute {r['compute_s']:.4f}s"
+                        f"  memory {r['memory_s']:.4f}s  collective {r['collective_s']:.4f}s"
+                        f"  dominant={r['dominant']}", flush=True,
+                    )
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_)
+    else:
+        print("\nall requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

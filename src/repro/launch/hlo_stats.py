@@ -1,0 +1,89 @@
+"""Post-SPMD HLO text analysis: collective-traffic accounting.
+
+``cost_analysis()`` has no collective numbers, so we parse the optimized HLO
+(``compiled.as_text()``): build a symbol table of instruction result shapes,
+then for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute sum the *operand* sizes (per the assignment's roofline
+recipe) — result sizes and per-op counts are recorded too.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*\)|\S+)\s+([\w\-]+)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a possibly-tuple HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective {count, operand_bytes, result_bytes} + totals."""
+    sizes: Dict[str, int] = {}
+    pending = []  # (opname, result_bytes, operand_names)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group(1), m.group(2), m.group(3)
+        b = _shape_bytes(type_str)
+        sizes[name] = b
+        base_op = op.rstrip(".0123456789")
+        if base_op.endswith("-start"):
+            base_op = base_op[: -len("-start")]
+        if base_op.endswith("-done"):
+            continue  # -done pairs with -start; count once
+        if base_op in COLLECTIVES:
+            paren = line.find("(")
+            args = line[paren + 1 : line.find(")", paren)] if paren >= 0 else ""
+            operands = re.findall(r"%?([\w.\-]+)", args)
+            operands = [o for o in operands if o in sizes or not o.isdigit()]
+            pending.append((base_op, b, operands))
+
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "operand_bytes": 0.0, "result_bytes": 0.0}
+    )
+    for op, res_b, operands in pending:
+        ob = sum(sizes.get(o, 0) for o in operands)
+        if ob == 0:
+            ob = res_b  # fallback: operands not in symbol table
+        rec = out[op]
+        rec["count"] += 1
+        rec["operand_bytes"] += ob
+        rec["result_bytes"] += res_b
+    total_operand = sum(r["operand_bytes"] for r in out.values())
+    total_result = sum(r["result_bytes"] for r in out.values())
+    out["TOTAL"] = {
+        "count": sum(r["count"] for r in out.values()),
+        "operand_bytes": total_operand,
+        "result_bytes": total_result,
+    }
+    return dict(out)

@@ -1,0 +1,22 @@
+"""Target-hardware constants (TPU v5e) for roofline terms."""
+
+PEAK_FLOPS_BF16 = 197e12   # FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_LINK_BW = 50e9         # bytes/s per link
+
+
+def roofline_terms(*, flops: float, bytes_hbm: float, bytes_collective: float,
+                   chips: int) -> dict:
+    """The three per-step roofline times (seconds) + dominant term."""
+    t_compute = flops / (chips * PEAK_FLOPS_BF16)
+    t_memory = bytes_hbm / (chips * HBM_BW)
+    t_collective = bytes_collective / (chips * ICI_LINK_BW)
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_collective,
+    }
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    terms["bound_s"] = terms[dom]
+    return terms

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips
+(v5e pod); multi-pod adds a leading pod axis: (pod=2, data=16, model=16).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = n_data * n_model
+    avail = len(jax.devices())
+    if n > avail:
+        raise ValueError(f"need {n} devices, have {avail}")
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,75 @@
+"""Model inputs: ShapeDtypeStruct specs (dry-run) + demo batches (smoke tests).
+
+Modality frontends are stubs per the assignment: ``[audio]``/``[vlm]`` archs
+receive precomputed frame/patch embeddings in their input dict.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.common import ArchConfig
+from repro.models import lm as lm_lib
+
+
+def _train_like_shapes(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Tuple]:
+    """(shape, dtype) entries for a full-sequence (train/prefill) batch."""
+    if cfg.family == "encdec":
+        return {
+            "src_embeds": ((batch, seq, cfg.d_model), jnp.bfloat16),
+            "tokens": ((batch, seq), jnp.int32),
+            "targets": ((batch, seq), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        n_img = min(cfg.frontend_tokens, max(seq // 2, 8))
+        s_txt = seq - n_img
+        return {
+            "patch_embeds": ((batch, n_img, cfg.d_model), jnp.bfloat16),
+            "tokens": ((batch, s_txt), jnp.int32),
+            "targets": ((batch, s_txt), jnp.int32),
+        }
+    return {
+        "tokens": ((batch, seq), jnp.int32),
+        "targets": ((batch, seq), jnp.int32),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill -> the batch dict; decode -> (cache, tokens, pos).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        return {
+            k: jax.ShapeDtypeStruct(shp, dt)
+            for k, (shp, dt) in _train_like_shapes(cfg, b, s).items()
+        }
+    # decode: one new token against a cache of length seq_len
+    cache = jax.eval_shape(
+        lambda: lm_lib.init_cache(
+            cfg, b, s, src_len=s if cfg.family == "encdec" else 0
+        )
+    )
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def make_demo_batch(cfg: ArchConfig, rng: np.random.Generator, batch: int,
+                    seq: int) -> Dict[str, jax.Array]:
+    """Concrete random batch matching input_specs (smoke tests/examples)."""
+    out: Dict[str, jax.Array] = {}
+    for k, (shp, dt) in _train_like_shapes(cfg, batch, seq).items():
+        if dt == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab, size=shp), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(shp), jnp.float32).astype(dt)
+    return out

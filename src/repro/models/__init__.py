@@ -1,0 +1,2 @@
+from repro.models.common import ArchConfig
+from repro.models import lm

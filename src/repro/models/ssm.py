@@ -1,0 +1,308 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2-style SSD.
+
+Both mixers come in two algebraically-equivalent forms:
+* ``*_recurrent`` — lax.scan over time; the decode step uses one iteration.
+* ``*_chunked``   — chunk-parallel form (intra-chunk matmuls + inter-chunk
+  state carry); this is the sub-quadratic **prefill** path that makes the
+  long_500k shape feasible for the ssm/hybrid architectures.
+
+Equivalence of the two forms is property-tested (tests/test_ssm.py).
+
+RWKV6 notes: data-dependent per-channel decay w_t = exp(-exp(·)) (the Finch
+signature), data-dependent token-shift (ddlerp), per-head bonus u, grouped
+rms-norm on the output. The chunked form rescales k by the within-chunk
+inverse decay product; with chunk=16 and the decay parameterization used
+here this stays comfortably inside f32 (see DESIGN.md §2 numerics note).
+
+Mamba2/SSD notes (hymba's mamba heads): scalar per-head decay, shared B/C
+projections of state size N; the chunked form is unconditionally stable
+(decay ratios are ≤ 1).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, dense_init, rms_norm
+
+
+# ===========================================================================
+# RWKV6 time-mix
+# ===========================================================================
+
+DDLERP_RANK = 16
+DECAY_RANK = 32
+
+
+def rwkv_time_mix_init(key, cfg: ArchConfig) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    hd = h * dh
+    ks = jax.random.split(key, 10)
+    dt = cfg.param_dtype
+    return {
+        "mu_base": jnp.full((d,), 0.5, dt),
+        "mu": jnp.full((5, d), 0.5, dt),                    # r,k,v,w,g
+        "ddw1": dense_init(ks[0], (d, 5 * DDLERP_RANK), d, dt),
+        "ddw2": dense_init(ks[1], (5, DDLERP_RANK, d), DDLERP_RANK, dt),
+        "wr": dense_init(ks[2], (d, hd), d, dt),
+        "wk": dense_init(ks[3], (d, hd), d, dt),
+        "wv": dense_init(ks[4], (d, hd), d, dt),
+        "wg": dense_init(ks[5], (d, hd), d, dt),
+        "w0": (0.3 * jax.random.normal(ks[6], (hd,), jnp.float32)).astype(dt),
+        "ww1": dense_init(ks[7], (d, DECAY_RANK), d, dt),
+        "ww2": dense_init(ks[8], (DECAY_RANK, hd), DECAY_RANK, dt),
+        "u": (0.3 * jax.random.normal(ks[9], (h, dh), jnp.float32)).astype(dt),
+        "ln_x": jnp.ones((hd,), dt),
+        "wo": dense_init(jax.random.fold_in(key, 99), (hd, d), hd, dt),
+    }
+
+
+def _rwkv_projections(p, x: jax.Array, x_prev: jax.Array, cfg: ArchConfig):
+    """Token-shifted projections. x [B,T,d]; x_prev [B,d] = token before x[:,0]."""
+    b, t, d = x.shape
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)  # shift(x)
+    sx = xs - x
+    # data-dependent lerp (ddlerp)
+    base = x + sx * p["mu_base"]
+    lora = jnp.tanh(base @ p["ddw1"]).reshape(b, t, 5, DDLERP_RANK)
+    delta = jnp.einsum("btfa,fad->btfd", lora, p["ddw2"])             # [B,T,5,d]
+    mix = x[:, :, None, :] + sx[:, :, None, :] * (p["mu"][None, None] + delta)
+    mr, mk, mv, mw, mg = [mix[:, :, i, :] for i in range(5)]
+    r = (mr @ p["wr"]).reshape(b, t, h, dh)
+    k = (mk @ p["wk"]).reshape(b, t, h, dh)
+    v = (mv @ p["wv"]).reshape(b, t, h, dh)
+    g = jax.nn.silu(mg @ p["wg"]).reshape(b, t, h, dh)
+    # data-dependent decay in (0,1): w = exp(-exp(w0 + lora(mw)))
+    z = p["w0"] + jnp.tanh(mw @ p["ww1"]) @ p["ww2"]
+    logw = -jnp.exp(jnp.clip(z.astype(jnp.float32), -8.0, 2.0))      # log w <= 0
+    logw = logw.reshape(b, t, h, dh)
+    return r, k, v, g, logw, x[:, -1, :]
+
+
+def _rwkv_out(p, o: jax.Array, g: jax.Array, cfg: ArchConfig) -> jax.Array:
+    b, t, h, dh = o.shape
+    o = o.reshape(b, t, h * dh)
+    # grouped rms-norm per head
+    on = rms_norm(o.reshape(b, t, h, dh), jnp.ones((dh,), o.dtype)).reshape(b, t, h * dh)
+    on = on * p["ln_x"]
+    return (on * g.reshape(b, t, h * dh)) @ p["wo"]
+
+
+def wkv6_recurrent(r, k, v, logw, u, state):
+    """Exact recurrence. r,k,v,logw [B,T,H,dh]; u [H,dh]; state [B,H,dh,dh].
+
+    o_t = r_t · (S + (u ∘ k_t) ⊗ v_t);  S ← diag(w_t) S + k_t ⊗ v_t
+    """
+    def step(s, inp):
+        rt, kt, vt, lwt = inp                              # [B,H,dh]
+        att = s + (u[None] * kt)[..., :, None] * vt[..., None, :]
+        ot = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        s = jnp.exp(lwt)[..., :, None] * s + kt[..., :, None] * vt[..., None, :]
+        return s, ot
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, logw))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state                  # [B,T,H,dh], state
+
+
+def wkv6_chunked(r, k, v, logw, u, state, chunk: int = 16):
+    """Chunk-parallel WKV (intra matmuls + state carry), == recurrent."""
+    b, t, h, dh = r.shape
+    pad = (-t) % chunk
+    if pad:
+        zeros = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nt = (t + pad) // chunk
+    rs = r.reshape(b, nt, chunk, h, dh)
+    ks = k.reshape(b, nt, chunk, h, dh)
+    vs = v.reshape(b, nt, chunk, h, dh)
+    lw = logw.reshape(b, nt, chunk, h, dh).astype(jnp.float32)
+    cum = jnp.cumsum(lw, axis=2)                           # L_i (inclusive)
+    cum_prev = cum - lw                                    # L_{i-1} (exclusive)
+    total = cum[:, :, -1]                                  # [B,nt,H,dh]
+
+    r_dec = rs * jnp.exp(cum_prev).astype(rs.dtype)        # r_t ∘ P_{t-1}
+    k_inc = ks * jnp.exp(-cum).astype(ks.dtype)            # k_i / P_i
+    k_rem = ks * jnp.exp(total[:, :, None] - cum).astype(ks.dtype)  # P_n/P_i k_i
+
+    # intra-chunk pairwise term A[t,i] = Σ_c r_dec[t,c] k_inc[i,c], i < t
+    A = jnp.einsum("bncht,bnmht->bnhcm", r_dec, k_inc)     # [B,nt,H,chunk,chunk]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    A = jnp.where(tri[None, None, None], A, 0.0)
+    diag = jnp.einsum("bncht,bncht->bnch", rs, u[None, None, None] * ks)
+    intra = jnp.einsum("bnhcm,bnmht->bncht", A, vs)
+    intra = intra + diag[..., None] * vs
+
+    def carry(s, inp):
+        rd, krem, vv, tot = inp
+        inter = jnp.einsum("bchk,bhkv->bchv", rd, s)       # [B,chunk,H,dh]
+        s = jnp.exp(tot)[..., :, None] * s + jnp.einsum(
+            "bchk,bchv->bhkv", krem, vv
+        )
+        return s, inter
+
+    xs = (
+        jnp.moveaxis(r_dec, 1, 0),
+        jnp.moveaxis(k_rem, 1, 0),
+        jnp.moveaxis(vs, 1, 0),
+        jnp.moveaxis(total, 1, 0),
+    )
+    state, inter = jax.lax.scan(carry, state, xs)
+    out = intra + jnp.moveaxis(inter, 0, 1)
+    out = out.reshape(b, nt * chunk, h, dh)[:, :t]
+    return out, state
+
+
+def rwkv_time_mix(p, x, x_prev, state, cfg: ArchConfig, *, mode: str = "chunked"):
+    """Full time-mix block. Returns (y [B,T,d], new_x_prev, new_state)."""
+    r, k, v, g, logw, last = _rwkv_projections(p, x, x_prev, cfg)
+    fn = wkv6_chunked if mode == "chunked" else wkv6_recurrent
+    o, state = fn(r, k, v, logw, p["u"].astype(jnp.float32), state)
+    return _rwkv_out(p, o.astype(x.dtype), g, cfg), last, state
+
+
+def rwkv_channel_mix_init(key, cfg: ArchConfig) -> Dict[str, jax.Array]:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = cfg.param_dtype
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": dense_init(ks[0], (d, ff), d, dt),
+        "wv": dense_init(ks[1], (ff, d), ff, dt),
+        "wr": dense_init(ks[2], (d, d), d, dt),
+    }
+
+
+def rwkv_channel_mix(p, x, x_prev):
+    """y = σ(r) ∘ ((relu(k)²) Wv). Returns (y, new_x_prev)."""
+    xs = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mk = x + (xs - x) * p["mu_k"]
+    mr = x + (xs - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(mk @ p["wk"]))
+    return jax.nn.sigmoid(mr @ p["wr"]) * (k @ p["wv"]), x[:, -1, :]
+
+
+# ===========================================================================
+# Mamba2-style SSD (hymba's parallel mamba heads)
+# ===========================================================================
+
+def ssd_init(key, cfg: ArchConfig) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    h, dh, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    return {
+        "wx": dense_init(ks[0], (d, h * dh), d, dt),
+        "wB": dense_init(ks[1], (d, n), d, dt),
+        "wC": dense_init(ks[2], (d, n), d, dt),
+        "wdt": dense_init(ks[3], (d, h), d, dt),
+        "dt_bias": jnp.zeros((h,), dt),
+        "a_log": (0.5 * jax.random.normal(ks[4], (h,), jnp.float32)).astype(dt),
+        "D": jnp.ones((h, dh), dt),
+        "wo": dense_init(ks[5], (h * dh, d), h * dh, dt),
+    }
+
+
+def _ssd_projections(p, x, cfg: ArchConfig):
+    b, t, d = x.shape
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    xv = (x @ p["wx"]).reshape(b, t, h, dh)
+    B = x @ p["wB"]                                        # [B,T,N]
+    C = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]) + p["dt_bias"])    # [B,T,H] > 0
+    loga = -jax.nn.softplus(p["a_log"].astype(jnp.float32))  # per head, < 0
+    logdecay = dt.astype(jnp.float32) * loga[None, None]   # [B,T,H] <= 0
+    return xv, B, C, dt, logdecay
+
+
+def ssd_recurrent(xv, B, C, dt, logdecay, D, state):
+    """h_t = a_t h + dt_t B_t ⊗ x_t; y_t = C_t·h_t + D∘x_t. state [B,H,N,dh]."""
+    def step(s, inp):
+        xt, bt, ct, dtt, ldt = inp
+        s = jnp.exp(ldt)[..., None, None] * s + (
+            dtt[..., None, None] * bt[:, None, :, None] * xt[..., None, :]
+        )
+        yt = jnp.einsum("bn,bhnv->bhv", ct, s) + D[None] * xt
+        return s, yt
+
+    xs = (
+        jnp.moveaxis(xv, 1, 0),
+        jnp.moveaxis(B, 1, 0),
+        jnp.moveaxis(C, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(logdecay, 1, 0),
+    )
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1), state
+
+
+def ssd_chunked(xv, B, C, dt, logdecay, D, state, chunk: int = 32):
+    """Chunk-parallel SSD; decay ratios exp(L_t-L_i) ≤ 1 => stable."""
+    b, t, h, dh = xv.shape
+    n = B.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        xv = jnp.pad(xv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        logdecay = jnp.pad(logdecay, ((0, 0), (0, pad), (0, 0)))
+    nt = (t + pad) // chunk
+    xs = xv.reshape(b, nt, chunk, h, dh)
+    Bs = B.reshape(b, nt, chunk, n)
+    Cs = C.reshape(b, nt, chunk, n)
+    dts = dt.reshape(b, nt, chunk, h)
+    ld = logdecay.reshape(b, nt, chunk, h).astype(jnp.float32)
+    L = jnp.cumsum(ld, axis=2)                             # inclusive
+    total = L[:, :, -1]                                    # [B,nt,H]
+
+    # intra: M[t,i] = exp(L_t - L_i) (C_t·B_i) dt_i   for i <= t
+    cb = jnp.einsum("bnca,bnma->bncm", Cs, Bs)             # [B,nt,chunk,chunk]
+    gap = L[:, :, :, None, :] - L[:, :, None, :, :]        # [B,nt,c,m,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.exp(jnp.where(tri[None, None, :, :, None], gap, -jnp.inf))
+    M = M * cb[..., None] * dts[:, :, None, :, :]          # [B,nt,c,m,H]
+    intra = jnp.einsum("bncmh,bnmhv->bnchv", M, xs)
+
+    def carry(s, inp):
+        cs, bs_, xx, dd, ll, tot = inp
+        inter = jnp.exp(ll)[..., None] * jnp.einsum("bca,bhav->bchv", cs, s)
+        upd = jnp.einsum(
+            "bch,bca,bchv->bhav", dd * jnp.exp(tot[:, None] - ll), bs_, xx
+        )
+        s = jnp.exp(tot)[..., None, None] * s + upd
+        return s, inter
+
+    xs_scan = (
+        jnp.moveaxis(Cs, 1, 0),
+        jnp.moveaxis(Bs, 1, 0),
+        jnp.moveaxis(xs, 1, 0),
+        jnp.moveaxis(dts, 1, 0),
+        jnp.moveaxis(L, 1, 0),
+        jnp.moveaxis(total, 1, 0),
+    )
+    state, inter = jax.lax.scan(carry, state, xs_scan)
+    out = intra + jnp.moveaxis(inter, 0, 1)
+    out = out + D[None, None, None] * xs
+    out = out.reshape(b, nt * chunk, h, dh)[:, :t]
+    return out, state
+
+
+def ssd_mix(p, x, state, cfg: ArchConfig, *, mode: str = "chunked"):
+    """Full SSD head block. Returns (y [B,T,d], new_state)."""
+    b, t, d = x.shape
+    xv, B, C, dt, logdecay = _ssd_projections(p, x, cfg)
+    fn = ssd_chunked if mode == "chunked" else ssd_recurrent
+    o, state = fn(
+        xv.astype(jnp.float32), B.astype(jnp.float32), C.astype(jnp.float32),
+        dt.astype(jnp.float32), logdecay, p["D"].astype(jnp.float32), state
+    )
+    h, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    return (o.astype(x.dtype).reshape(b, t, h * dh)) @ p["wo"], state

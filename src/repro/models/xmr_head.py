@@ -1,0 +1,89 @@
+"""MSCM tree head over the vocabulary — the paper's technique inside an LM.
+
+A 2-level XMR tree over the vocab (C = ceil(V/B) cluster rankers + the token
+rankers grouped in chunks of B) replaces the dense lm_head at decode time:
+
+    cluster scores   h · Wc            [B, C]        (small dense matmul)
+    beam             top-b clusters
+    token scores     MSCM blocks       [B, b, B]     (chunked kernels)
+
+Decode cost drops from O(d·V) to O(d·C + b·d·B) per token — sub-linear in V,
+exactly the paper's beam-search economics, with the *dense-query* variant of
+the chunk product (LM hidden states are dense; see DESIGN.md §5: chunking
+still removes all masked-out compute and keeps sibling locality; the sparse
+iterators don't apply).
+
+Construction is weight-exact: ``from_lm_head`` partitions the existing dense
+head, so beam=C reproduces the full softmax argmax exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class VocabTreeHead:
+    wc: jax.Array       # [d, C] cluster rankers (PIFA-style centroids or learned)
+    chunks: jax.Array   # [C, d, B] token rankers, chunked by cluster
+    n_vocab: int
+
+    @property
+    def branching(self) -> int:
+        return self.chunks.shape[2]
+
+    @property
+    def n_clusters(self) -> int:
+        return self.chunks.shape[0]
+
+    @classmethod
+    def from_lm_head(cls, head: jax.Array, branching: int = 128,
+                     order: np.ndarray | None = None) -> "VocabTreeHead":
+        """Partition a dense [d, V] head into a 2-level chunked tree.
+
+        ``order`` optionally permutes the vocab (e.g. by embedding clustering)
+        so chunk-mates are semantically similar; identity keeps exactness
+        trivially testable.
+        """
+        d, v = head.shape
+        b = int(branching)
+        c = (v + b - 1) // b
+        if order is not None:
+            head = head[:, order]
+        pad = c * b - v
+        if pad:
+            head = jnp.pad(head, ((0, 0), (0, pad)))
+        chunks = head.reshape(d, c, b).transpose(1, 0, 2)       # [C, d, B]
+        wc = chunks.mean(axis=2)                                # [C, d] centroid
+        return cls(wc=wc.T, chunks=chunks, n_vocab=v)
+
+    def decode_logits(self, h: jax.Array, *, beam: int) -> Tuple[jax.Array, jax.Array]:
+        """h [N, d] -> (scores [N, beam*B], token ids [N, beam*B]).
+
+        Only beam·B of the V logits are computed (MSCM masked blocks)."""
+        n, d = h.shape
+        b = self.branching
+        cscore = h @ self.wc                                    # [N, C]
+        top_c, top_i = jax.lax.top_k(cscore, beam)              # [N, beam]
+        # MSCM block evaluation: gather the beam's chunks, batched matmul.
+        sel = self.chunks[top_i]                                # [N, beam, d, B]
+        logits = jnp.einsum("nd,nkdb->nkb", h, sel)             # [N, beam, B]
+        ids = top_i[:, :, None] * b + jnp.arange(b)[None, None]
+        logits = jnp.where(ids < self.n_vocab, logits, -jnp.inf)
+        return logits.reshape(n, -1), ids.reshape(n, -1)
+
+    def full_logits(self, h: jax.Array) -> jax.Array:
+        """Dense oracle (tests): all V logits."""
+        w = self.chunks.transpose(1, 0, 2).reshape(h.shape[1], -1)
+        return (h @ w)[:, : self.n_vocab]
+
+
+def greedy_token(head: VocabTreeHead, h: jax.Array, beam: int = 8) -> jax.Array:
+    scores, ids = head.decode_logits(h, beam=beam)
+    best = jnp.argmax(scores, axis=1)
+    return jnp.take_along_axis(ids, best[:, None], axis=1)[:, 0]

@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    ef_compress,
+    ef_init,
+    get_optimizer,
+    warmup_cosine,
+)

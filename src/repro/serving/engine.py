@@ -1,0 +1,150 @@
+"""Batched XMR serving engine.
+
+Implements the paper's two production settings (§3.2):
+* **batch** — a matrix of queries served in one shot;
+* **online** — queries served one-by-one (batch size 1).
+
+The engine owns jit-cache hygiene (batch sizes are bucketed to powers of two,
+query nnz padded to a fixed ELL width) and records per-query wall-clock
+statistics in the form the paper reports (avg / P95 / P99, Table 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import XMRTree
+from repro.sparse.csr import CSR
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    beam: int = 10
+    topk: int = 10
+    method: str = "mscm_dense"
+    ell_width: int = 256          # query nnz cap (pad/truncate)
+    max_batch: int = 256
+    score_mode: str = "prod"
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    per_query_ms: List[float] = dataclasses.field(default_factory=list)
+
+    def record(self, total_s: float, n_queries: int) -> None:
+        self.per_query_ms.append(1e3 * total_s / max(n_queries, 1))
+
+    def summary(self) -> dict:
+        if not self.per_query_ms:
+            return {"count": 0}
+        arr = np.asarray(self.per_query_ms)
+        return {
+            "count": len(arr),
+            "avg_ms": float(arr.mean()),
+            "p50_ms": float(np.percentile(arr, 50)),
+            "p95_ms": float(np.percentile(arr, 95)),
+            "p99_ms": float(np.percentile(arr, 99)),
+        }
+
+
+def _bucket(n: int, max_batch: int) -> int:
+    b = 1
+    while b < n and b < max_batch:
+        b *= 2
+    return min(b, max_batch)
+
+
+class XMRServingEngine:
+    def __init__(self, tree: XMRTree, config: ServeConfig | None = None,
+                 label_perm: Optional[np.ndarray] = None):
+        self.tree = tree
+        self.config = config or ServeConfig()
+        self.label_perm = label_perm  # leaf position -> original label id
+        self.stats = LatencyStats()
+
+    # -- query marshalling --------------------------------------------------
+    def _to_ell(self, queries: CSR, start: int, count: int) -> Tuple[jax.Array, jax.Array]:
+        w = self.config.ell_width
+        d = queries.shape[1]
+        idx = np.full((count, w), d, np.int32)
+        val = np.zeros((count, w), np.float32)
+        for i in range(count):
+            ri, rv = queries.row(start + i)
+            k = min(len(ri), w)
+            idx[i, :k] = ri[:k]
+            val[i, :k] = rv[:k]
+        return jnp.asarray(idx), jnp.asarray(val)
+
+    def _run(self, xi: jax.Array, xv: jax.Array):
+        c = self.config
+        return self.tree.infer(
+            xi, xv, beam=c.beam, topk=c.topk, method=c.method, score_mode=c.score_mode
+        )
+
+    # -- serving modes --------------------------------------------------
+    def warmup(self, d: int, batch_sizes: Sequence[int] = (1,)) -> None:
+        for b in batch_sizes:
+            bb = _bucket(b, self.config.max_batch)
+            xi = jnp.full((bb, self.config.ell_width), d, jnp.int32)
+            xv = jnp.zeros((bb, self.config.ell_width), jnp.float32)
+            s, l = self._run(xi, xv)
+            jax.block_until_ready((s, l))
+
+    def serve_batch(self, queries: CSR) -> Tuple[np.ndarray, np.ndarray]:
+        """Batch setting: all queries at once (bucketed into max_batch chunks)."""
+        n = queries.shape[0]
+        out_s, out_l = [], []
+        i = 0
+        while i < n:
+            count = min(self.config.max_batch, n - i)
+            bucket = _bucket(count, self.config.max_batch)
+            xi, xv = self._to_ell(queries, i, count)
+            if bucket > count:  # pad to the jit bucket
+                d = queries.shape[1]
+                xi = jnp.concatenate(
+                    [xi, jnp.full((bucket - count, xi.shape[1]), d, jnp.int32)]
+                )
+                xv = jnp.concatenate(
+                    [xv, jnp.zeros((bucket - count, xv.shape[1]), jnp.float32)]
+                )
+            t0 = time.perf_counter()
+            s, l = self._run(xi, xv)
+            jax.block_until_ready((s, l))
+            self.stats.record(time.perf_counter() - t0, count)
+            out_s.append(np.asarray(s)[:count])
+            out_l.append(np.asarray(l)[:count])
+            i += count
+        scores = np.concatenate(out_s)
+        leaves = np.concatenate(out_l)
+        return scores, self._map_labels(leaves)
+
+    def serve_online(self, queries: CSR, limit: int | None = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Online setting: one query at a time, per-query latency recorded."""
+        n = queries.shape[0] if limit is None else min(limit, queries.shape[0])
+        out_s, out_l = [], []
+        for i in range(n):
+            xi, xv = self._to_ell(queries, i, 1)
+            t0 = time.perf_counter()
+            s, l = self._run(xi, xv)
+            jax.block_until_ready((s, l))
+            self.stats.record(time.perf_counter() - t0, 1)
+            out_s.append(np.asarray(s)[0])
+            out_l.append(np.asarray(l)[0])
+        scores = np.stack(out_s)
+        leaves = np.stack(out_l)
+        return scores, self._map_labels(leaves)
+
+    def _map_labels(self, leaves: np.ndarray) -> np.ndarray:
+        if self.label_perm is None:
+            return leaves
+        return self.label_perm[leaves]
+
+    def latency_summary(self) -> dict:
+        return self.stats.summary()

@@ -1,0 +1,3 @@
+from repro.sparse.csr import CSC, CSR, random_sparse_csc, random_sparse_csr
+
+__all__ = ["CSR", "CSC", "random_sparse_csr", "random_sparse_csc"]

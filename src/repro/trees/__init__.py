@@ -1,0 +1,7 @@
+from repro.trees.cluster import (
+    TreeStructure,
+    build_clustered_tree,
+    build_tree_structure,
+    pifa_embeddings,
+)
+from repro.trees.train import TrainedXMRModel, sparsify_columns, train_xmr_model

@@ -1,0 +1,34 @@
+"""Shared test fixtures/helpers.
+
+NOTE: no XLA device-count flags here — tests see the real single CPU device.
+Only launch/dryrun.py (run as a script) forces 512 placeholder devices.
+"""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(1234)
+
+
+def make_tree_weights(rng, d, level_sizes, branching, nnz_per_col=10):
+    """Random per-level CSC weight matrices with sibling-correlated support."""
+    from repro.sparse import random_sparse_csc
+
+    return [
+        random_sparse_csc(d, L, nnz_per_col, rng, sibling_groups=branching)
+        for L in level_sizes
+    ]
+
+
+def brute_force_scores(X_dense, weights):
+    """Dense full-tree scores (paper eq. 5) — the exactness oracle."""
+    sig = lambda z: 1.0 / (1.0 + np.exp(-z))
+    prev = np.ones((X_dense.shape[0], 1), np.float32)
+    for w in weights:
+        act = sig(X_dense @ w.to_dense())
+        b = act.shape[1] // prev.shape[1]
+        prev = np.repeat(prev, b, axis=1) * act
+    return prev

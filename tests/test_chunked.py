@@ -1,0 +1,79 @@
+"""Chunked-format (MSCM data structure) unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunked import ChunkedLayer, ColumnELLLayer
+from repro.sparse import CSC, CSR, random_sparse_csc, random_sparse_csr
+
+
+def test_chunked_roundtrip_exact(rng):
+    d, L, B = 64, 48, 8
+    w = random_sparse_csc(d, L, 6, rng, sibling_groups=B)
+    ch = ChunkedLayer.from_csc(w, B)
+    dense = ch.to_dense()
+    np.testing.assert_array_equal(dense[:, :L], w.to_dense())
+    # padded phantom columns are exactly zero
+    assert not dense[:, L:].any()
+
+
+def test_chunked_shapes_and_padding(rng):
+    d, L, B = 100, 30, 8  # L not divisible by B -> padded final chunk
+    w = random_sparse_csc(d, L, 5, rng, sibling_groups=B)
+    ch = ChunkedLayer.from_csc(w, B)
+    assert ch.C == 4 and ch.n_cols == 32
+    assert ch.R % 8 == 0  # sublane alignment
+    assert ch.rows.dtype == np.int32 and ch.vals.dtype == np.float32
+    # sentinel-padded tails
+    for c in range(ch.C):
+        row = ch.rows[c]
+        valid = row[row < d]
+        assert (np.diff(valid) > 0).all()  # sorted & unique
+        assert (row[len(valid):] == d).all()
+
+
+def test_sibling_overlap_improves_occupancy(rng):
+    """Paper Item 2: correlated sibling support => denser chunk tiles."""
+    d, L, B = 512, 256, 32
+    w_corr = random_sparse_csc(d, L, 16, rng, sibling_groups=B, sibling_overlap=0.9)
+    w_rand = random_sparse_csc(d, L, 16, rng, sibling_groups=1, sibling_overlap=0.0)
+    occ_corr = ChunkedLayer.from_csc(w_corr, B).occupancy()
+    occ_rand = ChunkedLayer.from_csc(w_rand, B).occupancy()
+    assert occ_corr > occ_rand
+
+
+def test_column_ell_matches_csc(rng):
+    d, L, B = 64, 20, 4
+    w = random_sparse_csc(d, L, 6, rng)
+    col = ColumnELLLayer.from_csc(w, B)
+    dense = np.zeros((d + 1, col.L), np.float32)
+    for j in range(col.L):
+        np.add.at(dense, (col.rows[j], j), col.vals[j])
+    np.testing.assert_array_equal(dense[:d, :L], w.to_dense())
+
+
+def test_csr_ell_roundtrip(rng):
+    x = random_sparse_csr(7, 50, 9, rng)
+    idx, val = x.to_ell()
+    dense = np.zeros((7, 51), np.float32)
+    np.add.at(dense, (np.arange(7)[:, None], idx), val)
+    np.testing.assert_allclose(dense[:, :50], x.to_dense(), rtol=1e-6)
+    assert (dense[:, 50] == 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    d=st.integers(8, 200),
+    n_chunks=st.integers(1, 6),
+    branching=st.sampled_from([2, 4, 8, 32]),
+    nnz=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_roundtrip_property(d, n_chunks, branching, nnz, seed):
+    rng = np.random.default_rng(seed)
+    L = n_chunks * branching
+    w = random_sparse_csc(d, L, min(nnz, d), rng, sibling_groups=branching)
+    ch = ChunkedLayer.from_csc(w, branching)
+    np.testing.assert_array_equal(ch.to_dense()[:, :L], w.to_dense())
+    assert ch.memory_bytes() == ch.rows.nbytes + ch.vals.nbytes

@@ -1,0 +1,58 @@
+"""Sharded XMR inference == single-device inference (8 host devices).
+
+Runs in a subprocess so the 8-device XLA flag never leaks into other tests.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import XMRTree
+from repro.core.distributed import shard_leaf_level, sharded_infer
+from repro.sparse import random_sparse_csc, random_sparse_csr
+
+rng = np.random.default_rng(5)
+d, B = 120, 8
+Ws = [random_sparse_csc(d, 8, 10, rng, sibling_groups=B),
+      random_sparse_csc(d, 64, 10, rng, sibling_groups=B),
+      random_sparse_csc(d, 512, 10, rng, sibling_groups=B)]
+tree = XMRTree.from_weight_matrices(Ws, B)
+X = random_sparse_csr(16, d, 15, rng)
+xi, xv = X.to_ell()
+xi, xv = jnp.asarray(xi), jnp.asarray(xv)
+
+ref_s, ref_l = tree.infer(xi, xv, beam=10, topk=5)
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+upper, leaf = shard_leaf_level(tree, mesh)
+with mesh:
+    s, l = sharded_infer(tree, upper, leaf, xi, xv, mesh, beam=10, topk=5)
+
+labels_match = bool((np.asarray(l) == np.asarray(ref_l)).all())
+scores_close = bool(np.allclose(np.asarray(s), np.asarray(ref_s), rtol=1e-5, atol=1e-6))
+print(json.dumps({"labels_match": labels_match, "scores_close": scores_close,
+                  "n_devices": len(jax.devices())}))
+"""
+
+
+def test_sharded_inference_matches_single_device():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_devices"] == 8
+    assert res["labels_match"], res
+    assert res["scores_close"], res

@@ -1,0 +1,123 @@
+"""Pallas MSCM kernel validation (interpret mode) against the jnp oracle.
+
+Sweeps shapes/dtypes per the assignment; every kernel variant must match
+``ref.mscm_ref`` allclose. TPU is the target; interpret=True executes the
+kernel bodies on CPU.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mscm as M
+from repro.core.chunked import ChunkedLayer
+from repro.kernels import ops
+from repro.kernels import ref as ref_lib
+from repro.kernels.mscm_kernel import group_blocks_by_chunk
+from repro.sparse import random_sparse_csc, random_sparse_csr
+
+
+def _mk(rng, n, d, C, B, nnz_w, nnz_x, A):
+    w = random_sparse_csc(d, C * B, nnz_w, rng, sibling_groups=B)
+    ch = ChunkedLayer.from_csc(w, B)
+    x = random_sparse_csr(n, d, nnz_x, rng)
+    xi, xv = x.to_ell()
+    xd = M.scatter_dense(jnp.asarray(xi), jnp.asarray(xv), d)
+    bq = rng.integers(0, n, size=A).astype(np.int32)
+    bc = rng.integers(0, C, size=A).astype(np.int32)
+    rows, vals = jnp.asarray(ch.rows), jnp.asarray(ch.vals)
+    want = np.asarray(ref_lib.mscm_ref(xd, rows, vals, jnp.asarray(bq), jnp.asarray(bc)))
+    return xd, rows, vals, bq, bc, want
+
+
+@pytest.mark.parametrize("variant", ["fused", "pregather"])
+def test_pallas_variants_basic(rng, variant):
+    xd, rows, vals, bq, bc, want = _mk(rng, n=5, d=96, C=4, B=8, nnz_w=8, nnz_x=12, A=10)
+    got = ops.mscm_pallas(
+        xd, rows, vals, jnp.asarray(bq), jnp.asarray(bc), variant=variant, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("sort", [True, False])
+def test_pallas_sort_invariance(rng, sort):
+    """Chunk-sorted evaluation (paper's final §4 optimization) is a pure
+    schedule change — results are identical in any block order."""
+    xd, rows, vals, bq, bc, want = _mk(rng, n=4, d=64, C=6, B=4, nnz_w=6, nnz_x=9, A=12)
+    got = ops.mscm_pallas(
+        xd, rows, vals, jnp.asarray(bq), jnp.asarray(bc), sort=sort, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+def test_pallas_duplicate_chunks_revisit(rng):
+    """Many queries hitting the same chunk (the revisit fast path)."""
+    xd, rows, vals, _, _, _ = _mk(rng, n=8, d=80, C=3, B=8, nnz_w=8, nnz_x=10, A=1)
+    bq = np.arange(8, dtype=np.int32)
+    bc = np.zeros(8, dtype=np.int32)  # all blocks -> chunk 0
+    want = np.asarray(ref_lib.mscm_ref(xd, rows, vals, jnp.asarray(bq), jnp.asarray(bc)))
+    got = ops.mscm_pallas(xd, rows, vals, jnp.asarray(bq), jnp.asarray(bc), interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("qt", [2, 4, 8])
+def test_grouped_kernel(rng, qt):
+    xd, rows, vals, bq, bc, want = _mk(rng, n=7, d=72, C=5, B=8, nnz_w=7, nnz_x=11, A=17)
+    got = ops.mscm_pallas_grouped(xd, rows, vals, bq, bc, qt=qt, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+def test_group_blocks_by_chunk():
+    bc = np.array([3, 1, 3, 3, 0, 1], np.int32)
+    tile_c, tile_src = group_blocks_by_chunk(bc, qt=2)
+    # every block appears exactly once
+    members = tile_src[tile_src >= 0]
+    assert sorted(members.tolist()) == list(range(6))
+    # each tile's members share the tile's chunk
+    for t in range(len(tile_c)):
+        for s in tile_src[t]:
+            if s >= 0:
+                assert bc[s] == tile_c[t]
+    # chunk 3 has 3 members -> two tiles (2 + 1 padded)
+    assert (tile_c == 3).sum() == 2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    d=st.integers(8, 300),
+    c=st.integers(1, 6),
+    b=st.sampled_from([2, 8, 32]),
+    nnz_w=st.integers(1, 12),
+    nnz_x=st.integers(1, 16),
+    a=st.integers(1, 16),
+    variant=st.sampled_from(["fused", "pregather"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_property_sweep(n, d, c, b, nnz_w, nnz_x, a, variant, seed):
+    rng = np.random.default_rng(seed)
+    xd, rows, vals, bq, bc, want = _mk(
+        rng, n=n, d=d, C=c, B=b, nnz_w=min(nnz_w, d), nnz_x=min(nnz_x, d), A=a
+    )
+    got = ops.mscm_pallas(
+        xd, rows, vals, jnp.asarray(bq), jnp.asarray(bc), variant=variant, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_dtype_sweep(rng, dtype):
+    """bf16 weights path (serving quantization) stays within bf16 tolerance."""
+    xd, rows, vals, bq, bc, _ = _mk(rng, n=4, d=64, C=3, B=8, nnz_w=6, nnz_x=8, A=8)
+    vals16 = vals.astype(dtype)
+    xd16 = xd.astype(dtype)
+    want = np.asarray(
+        ref_lib.mscm_ref(xd16.astype(jnp.float32), rows, vals16.astype(jnp.float32),
+                         jnp.asarray(bq), jnp.asarray(bc))
+    )
+    got = ops.mscm_pallas(xd16, rows, vals16, jnp.asarray(bq), jnp.asarray(bc),
+                          interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32), want, rtol=tol, atol=tol)

@@ -1,0 +1,102 @@
+"""Unit tests: sharding rule engine + HLO collective parser (pure host)."""
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_stats import _shape_bytes, collective_stats
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY %main {
+  %p0 = f32[4,1024]{1,0} parameter(0)
+  %ag = f32[64,1024]{1,0} all-gather(%p0), replica_groups={}
+  %ar.1 = f32[64,1024]{1,0} all-reduce(%ag), to_apply=%add
+  %rs = f32[4,1024]{1,0} reduce-scatter(%ar.1), dimensions={0}
+  %cp = f32[4,1024]{1,0} collective-permute(%rs), source_target_pairs={{0,1}}
+  %ags = f32[64,1024]{1,0} all-gather-start(%p0)
+  %agd = f32[64,1024]{1,0} all-gather-done(%ags)
+  ROOT %out = f32[4,1024]{1,0} add(%rs, %cp)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[4,1024]{1,0}") == 4 * 1024 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[2], s32[4])") == 8 + 16
+    assert _shape_bytes("pred[8]") == 8
+
+
+def test_collective_stats_parses_all_kinds():
+    st = collective_stats(HLO_SAMPLE)
+    assert st["all-gather"]["count"] == 2  # plain + -start (done not counted)
+    assert st["all-reduce"]["count"] == 1
+    assert st["reduce-scatter"]["count"] == 1
+    assert st["collective-permute"]["count"] == 1
+    # operand resolution: all-gather operand = p0 (16 KiB)
+    assert st["all-gather"]["operand_bytes"] == pytest.approx(2 * 4 * 1024 * 4)
+    # all-reduce operand == result size
+    assert st["all-reduce"]["operand_bytes"] == pytest.approx(64 * 1024 * 4)
+    assert st["TOTAL"]["count"] == 5
+
+
+# ---------------------------------------------------------------------------
+# sharding rule engine (uses 8 host devices in a subprocess-free way: the
+# rules only need mesh *shape* metadata, so a tiny mesh suffices)
+# ---------------------------------------------------------------------------
+
+def test_param_spec_rules():
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    if len(jax.devices()) < 1:
+        pytest.skip("no devices")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from repro.distributed.sharding import param_spec
+
+    # 1-D -> replicated
+    assert param_spec("layers/ln1", (64,), mesh) == P()
+    # attention out-proj: in-feature dim on model
+    spec = param_spec("layers/attn/wo", (4, 128, 64), mesh)
+    assert spec[1] == "model"
+    # embed: vocab on model
+    spec = param_spec("embed", (1000, 64), mesh)
+    assert spec[0] == "model"
+
+
+def test_expert_divisibility_fallback():
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    # mesh shape metadata is what matters; build a 1x1 stand-in and check
+    # the rule logic via a fake mesh-like shim is overkill — instead verify
+    # on the real production mesh geometry arithmetic:
+    from repro.distributed.sharding import _assign
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    m = FakeMesh()
+    # qwen: E=128 divides 16 -> experts on model
+    spec = _assign((94, 128, 4096, 1536), [(1, "model"), (2, "data")], m)
+    assert spec[1] == "model" and spec[2] == "data"
+    # grok: E=8 does NOT divide 16 -> skipped, next prefs apply
+    spec = _assign((64, 8, 6144, 32768), [(1, "model"), (2, "data"), (3, None)], m)
+    assert spec[1] is None and spec[2] == "data"
+
+
+def test_assign_never_reuses_axis():
+    from repro.distributed.sharding import _assign
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 4, "model": 4}
+
+    spec = _assign((16, 16), [(0, "model"), (1, "model")], FakeMesh())
+    assert spec[0] == "model" and spec[1] is None

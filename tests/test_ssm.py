@@ -1,0 +1,75 @@
+"""SSM mixer equivalence properties: chunked == recurrent == stepwise."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import ssm as S
+from repro.models.common import ArchConfig
+
+
+def _cfg(d=48, h=3, dh=16, n=8, ff=96):
+    return ArchConfig(
+        name="t", family="ssm", n_layers=1, d_model=d, n_heads=0, n_kv_heads=0,
+        head_dim=0, d_ff=ff, vocab=100, attn_type="none",
+        ssm_heads=h, ssm_head_dim=dh, ssm_state=n,
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(1, 50), seed=st.integers(0, 2**31 - 1),
+       chunk=st.sampled_from([4, 16, 32]))
+def test_wkv6_chunked_equals_recurrent(t, seed, chunk):
+    cfg = _cfg()
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    b, h, dh = 2, cfg.ssm_heads, cfg.ssm_head_dim
+    r, k, v = (jax.random.normal(ks[i], (b, t, h, dh)) * 0.5 for i in range(3))
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, t, h, dh)) * 0.3)
+    u = jax.random.normal(ks[4], (h, dh)) * 0.3
+    s0 = jax.random.normal(jax.random.PRNGKey(seed + 1), (b, h, dh, dh)) * 0.2
+    o1, s1 = S.wkv6_recurrent(r, k, v, logw, u, s0)
+    o2, s2 = S.wkv6_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.integers(1, 50), seed=st.integers(0, 2**31 - 1),
+       chunk=st.sampled_from([8, 32]))
+def test_ssd_chunked_equals_recurrent(t, seed, chunk):
+    cfg = _cfg()
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    b, h, dh, n = 2, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xv = jax.random.normal(ks[0], (b, t, h, dh))
+    B = jax.random.normal(ks[1], (b, t, n)) * 0.5
+    C = jax.random.normal(ks[2], (b, t, n)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, t, h)))
+    logdecay = -dt * 0.5
+    D = jnp.ones((h, dh))
+    s0 = jax.random.normal(ks[4], (b, h, n, dh)) * 0.2
+    o1, s1 = S.ssd_recurrent(xv, B, C, dt, logdecay, D, s0)
+    o2, s2 = S.ssd_chunked(xv, B, C, dt, logdecay, D, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+def test_state_carry_across_segments():
+    """Processing [0:T] == processing [0:T/2] then [T/2:T] with carried state."""
+    cfg = _cfg()
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (2, 24, cfg.d_model)) * 0.5
+    p = S.rwkv_time_mix_init(jax.random.PRNGKey(4), cfg)
+    xp = jnp.zeros((2, cfg.d_model))
+    st0 = jnp.zeros((2, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_head_dim))
+    y_full, _, s_full = S.rwkv_time_mix(p, x, xp, st0, cfg, mode="chunked")
+    y1, xp1, s1 = S.rwkv_time_mix(p, x[:, :12], xp, st0, cfg, mode="chunked")
+    y2, _, s2 = S.rwkv_time_mix(p, x[:, 12:], xp1, s1, cfg, mode="chunked")
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full),
+        rtol=2e-4, atol=2e-4,
+    )
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=2e-4, atol=2e-4)
