@@ -15,7 +15,6 @@ import argparse
 import time
 from typing import List
 
-import jax
 import numpy as np
 
 from benchmarks.common import build_benchmark_tree, csv_line, ell_queries, time_fn

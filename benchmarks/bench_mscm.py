@@ -17,7 +17,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks.common import build_benchmark_tree, csv_line, ell_queries, time_fn
-from repro.data.xmr_data import PAPER_SHAPES, XMRShape, scaled_shape
+from repro.data.xmr_data import PAPER_SHAPES, scaled_shape
 
 METHODS = ("vanilla", "mscm_dense", "mscm_searchsorted")
 
@@ -73,7 +73,6 @@ def profile_share(ds: str = "eurlex-4k", branching: int = 8, seed: int = 0,
     import jax
     import jax.numpy as jnp
 
-    from repro.core import mscm as M
     from repro.core.beam import beam_step
 
     shape = PAPER_SHAPES[ds]

@@ -10,7 +10,6 @@ branching — is what this benchmark checks.
 
 from __future__ import annotations
 
-import argparse
 from typing import List
 
 import numpy as np

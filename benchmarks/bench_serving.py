@@ -1,0 +1,151 @@
+"""Micro-batched online serving vs the per-query baseline.
+
+The paper's online setting (§3.2) is one-query-at-a-time; its
+batch-parallelism study (Fig. 6) shows how amortization pays at batch > 1.
+This benchmark measures the piece in between — the production shape: an
+async micro-batcher coalescing an online request stream into jit buckets.
+
+Three measurements on the CI-size tree:
+
+* ``online-baseline``  — blocking per-query ``serve_online`` (QPS floor);
+* ``microbatch-closed``— closed loop: all requests in flight, size-trigger
+  coalescing at batch 16 (QPS ceiling; asserts bitwise-identical results);
+* ``microbatch-poisson``— open loop: Poisson arrivals at ~2x the baseline's
+  capacity, reporting the Table-4 panel with queue-wait vs compute split.
+
+Run: ``python -m benchmarks.bench_serving [--n 128] [--max-batch 16]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import build_benchmark_tree, csv_line
+from repro.data.xmr_data import PAPER_SHAPES, benchmark_queries, scaled_shape
+from repro.serving import (
+    BatchPolicy,
+    MicroBatcher,
+    ServeConfig,
+    ServerMetrics,
+    XMRServingEngine,
+)
+
+
+def _build_engine(max_labels: int, max_batch: int, seed: int):
+    shape = PAPER_SHAPES["eurlex-4k"]
+    if shape.L > max_labels:
+        shape = scaled_shape(shape, max_labels / shape.L)
+    rng = np.random.default_rng(seed)
+    tree = build_benchmark_tree(shape, 16, rng)
+    engine = XMRServingEngine(
+        tree, ServeConfig(ell_width=256, max_batch=max(64, max_batch))
+    )
+    # Warm every bucket the batcher can form, so odd-size deadline batches
+    # never hit a fresh jit compile mid-measurement.
+    engine.warmup_buckets(shape.d, max_batch)
+    return shape, engine, rng
+
+
+def run(
+    *,
+    n_queries: int = 128,
+    max_batch: int = 16,
+    max_wait_ms: float = 2.0,
+    max_labels: int = 4096,
+    seed: int = 0,
+) -> List[str]:
+    shape, engine, rng = _build_engine(max_labels, max_batch, seed)
+    queries = benchmark_queries(shape, n_queries, rng)
+    lines = []
+
+    # -- per-query baseline (the paper's online setting) --------------------
+    t0 = time.perf_counter()
+    base_s, base_l = engine.serve_online(queries)
+    base_wall = time.perf_counter() - t0
+    base_qps = n_queries / base_wall
+    lines.append(
+        csv_line(
+            f"{shape.name}/serving/online-baseline",
+            1e6 * base_wall / n_queries,
+            f"qps={base_qps:.1f}",
+        )
+    )
+
+    # -- closed-loop micro-batching ----------------------------------------
+    mb = MicroBatcher(engine, BatchPolicy(max_batch, max_wait_ms))
+    futs = mb.submit_csr(queries)  # all in flight before the worker starts
+    t0 = time.perf_counter()
+    mb.start()
+    results = [f.result(timeout=120) for f in futs]
+    closed_wall = time.perf_counter() - t0
+    mb.stop()
+    closed_qps = n_queries / closed_wall
+
+    mb_s = np.stack([r[0] for r in results])
+    mb_l = np.stack([r[1] for r in results])
+    identical = bool(
+        np.array_equal(mb_s, base_s) and np.array_equal(mb_l, base_l)
+    )
+    speedup = closed_qps / base_qps
+    lines.append(
+        csv_line(
+            f"{shape.name}/serving/microbatch-closed",
+            1e6 * closed_wall / n_queries,
+            f"qps={closed_qps:.1f} speedup={speedup:.2f}x "
+            f"bitwise_identical={identical} "
+            f"avg_batch={mb.metrics.summary()['avg_batch']:.1f}",
+        )
+    )
+
+    # -- open-loop Poisson arrivals at ~2x baseline capacity ----------------
+    rate = 2.0 * base_qps
+    metrics = ServerMetrics()
+    mb = MicroBatcher(engine, BatchPolicy(max_batch, max_wait_ms), metrics)
+    mb.start()
+    arrivals = rng.exponential(1.0 / rate, size=n_queries)
+    futs = []
+    for i, gap in enumerate(arrivals):
+        time.sleep(gap)
+        futs.append(mb.submit(*queries.row(i)))
+    for f in futs:
+        f.result(timeout=120)
+    mb.stop()
+    s = metrics.summary()
+    lines.append(
+        csv_line(
+            f"{shape.name}/serving/microbatch-poisson",
+            1e3 * s["avg_ms"],
+            f"rate={rate:.0f}qps p50={s['p50_ms']:.2f}ms "
+            f"p95={s['p95_ms']:.2f}ms p99={s['p99_ms']:.2f}ms "
+            f"wait={s['queue_wait_avg_ms']:.2f}ms "
+            f"compute={s['compute_per_query_avg_ms']:.2f}ms "
+            f"avg_batch={s['avg_batch']:.1f}",
+        )
+    )
+    return lines
+
+
+def main(argv=None) -> List[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=128)
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--max-labels", type=int, default=4096)
+    args = ap.parse_args(argv)
+    lines = run(
+        n_queries=args.n,
+        max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms,
+        max_labels=args.max_labels,
+    )
+    for line in lines:
+        print(line)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,6 @@ the dense argmax) and measures the latency ratio at practical beam widths.
 
 from __future__ import annotations
 
-import argparse
 from typing import List
 
 import jax

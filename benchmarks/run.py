@@ -1,12 +1,15 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Fast defaults; per-table flags via
-``python -m benchmarks.bench_<name> --help``.
+``python -m benchmarks.bench_<name> --help``. ``--json PATH`` additionally
+writes the rows as a JSON artifact (the CI benchmark-smoke job uploads this
+as ``BENCH_ci.json`` so the perf trajectory accumulates across commits).
 
   Tables 1-3 / Figs 3-4  -> bench_mscm       (datasets × branching × setting)
   Table 4 / §6           -> bench_enterprise (d=4M, 1M-label tree geometry)
   Figure 5               -> bench_napkin     (per-column ref vs MSCM)
   Figure 6 / §6.1        -> bench_parallel   (batch-amortization analogue)
+  §3.2 online            -> bench_serving    (micro-batched vs per-query)
   beyond-paper           -> bench_xmr_head   (MSCM vocab-tree LM head)
   §Roofline              -> roofline         (dry-run derived, no timing)
 """
@@ -14,8 +17,29 @@ Prints ``name,us_per_call,derived`` CSV. Fast defaults; per-table flags via
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def _parse_rows(lines: list) -> list:
+    rows = []
+    for line in lines:
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append(
+            {
+                "name": parts[0],
+                "us_per_call": us,
+                "derived": parts[2] if len(parts) > 2 else "",
+            }
+        )
+    return rows
 
 
 def main() -> None:
@@ -23,13 +47,21 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow; default is CI-size)")
     ap.add_argument("--skip-enterprise", action="store_true")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
     args = ap.parse_args()
 
     from benchmarks import (bench_enterprise, bench_mscm, bench_napkin,
-                            bench_parallel, bench_xmr_head)
+                            bench_parallel, bench_serving, bench_xmr_head)
 
     print("name,us_per_call,derived")
     t0 = time.time()
+    all_lines = []
+
+    def emit(lines) -> None:
+        for line in lines:
+            print(line, flush=True)
+            all_lines.append(line)
 
     if args.full:
         mscm_kw = dict(
@@ -40,24 +72,32 @@ def main() -> None:
     else:
         mscm_kw = dict(datasets=["eurlex-4k", "wiki10-31k", "amazon-670k"],
                        max_labels=32_768, n_batch=64)
-    for line in bench_mscm.run(mscm_kw["datasets"],
-                               max_labels=mscm_kw["max_labels"],
-                               n_batch=mscm_kw["n_batch"]):
-        print(line, flush=True)
-    for line in bench_mscm.profile_share():
-        print(line, flush=True)
-    for line in bench_napkin.run(max_labels=mscm_kw["max_labels"]):
-        print(line, flush=True)
-    for line in bench_parallel.run(max_labels=mscm_kw["max_labels"],
-                                   batches=(1, 4, 16, 64)):
-        print(line, flush=True)
-    for line in bench_xmr_head.run():
-        print(line, flush=True)
+    emit(bench_mscm.run(mscm_kw["datasets"],
+                        max_labels=mscm_kw["max_labels"],
+                        n_batch=mscm_kw["n_batch"]))
+    emit(bench_mscm.profile_share())
+    emit(bench_napkin.run(max_labels=mscm_kw["max_labels"]))
+    emit(bench_parallel.run(max_labels=mscm_kw["max_labels"],
+                            batches=(1, 4, 16, 64)))
+    emit(bench_serving.run(n_queries=64 if not args.full else 256))
+    emit(bench_xmr_head.run())
     if not args.skip_enterprise:
-        for line in bench_enterprise.run(n_queries=16 if not args.full else 64):
-            print(line, flush=True)
+        emit(bench_enterprise.run(n_queries=16 if not args.full else 64))
 
-    print(f"# total bench time {time.time() - t0:.0f}s", file=sys.stderr)
+    wall = time.time() - t0
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {
+                    "rows": _parse_rows(all_lines),
+                    "full": args.full,
+                    "wall_s": round(wall, 1),
+                },
+                f,
+                indent=2,
+            )
+        print(f"# wrote {args.json}", file=sys.stderr)
+    print(f"# total bench time {wall:.0f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

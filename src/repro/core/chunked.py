@@ -21,7 +21,6 @@ search jit-able with no dynamic sparsity in the control path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import numpy as np
 

@@ -29,7 +29,6 @@ All functions are jit-friendly and differentiable in ``vals``/``x_val``.
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

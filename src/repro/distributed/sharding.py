@@ -15,7 +15,7 @@ multi-pod. Policy (DESIGN.md §6):
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -33,7 +33,6 @@ Alignment notes (TPU target; interpret mode ignores these):
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

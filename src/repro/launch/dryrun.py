@@ -24,7 +24,6 @@ import traceback
 from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, runnable
 from repro.configs.shapes import ShapeSpec

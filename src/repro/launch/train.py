@@ -12,8 +12,7 @@ from __future__ import annotations
 import argparse
 import functools
 import logging
-import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,12 +12,13 @@ absorbed form is the §Perf optimization for decode_32k.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ArchConfig, apply_rope, dense_init, rms_norm, rope_angles
+from repro.models.common import (ArchConfig, apply_rope, dense_init,
+                                 get_abstract_mesh, rms_norm, rope_angles)
 
 
 # ---------------------------------------------------------------------------
@@ -60,7 +61,7 @@ def _attn_act_specs(cfg: ArchConfig, b, s, h, hkv):
     """
     if cfg.attn_act_shard != "auto":
         return None, None, None
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or am.empty or "model" not in am.axis_names:
         return None, None, None
     from jax.sharding import PartitionSpec as _P

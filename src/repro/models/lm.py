@@ -16,9 +16,7 @@ precomputed patch/frame embeddings (see ``launch.specs.input_specs``).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +24,8 @@ import jax.numpy as jnp
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import ssm as ssm_lib
-from repro.models.common import ArchConfig, cross_entropy_loss, dense_init, rms_norm
+from repro.models.common import (ArchConfig, cross_entropy_loss, dense_init,
+                                 get_abstract_mesh, rms_norm)
 
 Params = Dict[str, Any]
 
@@ -172,7 +171,7 @@ def _shard_act(x: jax.Array) -> jax.Array:
     batch). Explicit per-layer constraints pin the batch dim — standard
     production practice (cf. MaxText). No-op outside a mesh context or when
     the batch dim does not divide."""
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or am.empty:
         return x
     dp = tuple(a for a in ("pod", "data") if a in am.axis_names)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from jax.ad_checkpoint import checkpoint_name
 
-from repro.models.common import ArchConfig, dense_init
+from repro.models.common import ArchConfig, dense_init, get_abstract_mesh
 
 
 def moe_init(key, cfg: ArchConfig) -> Dict[str, jax.Array]:
@@ -59,7 +59,7 @@ def _moe_spec(cfg: ArchConfig):
     'data' so expert weights stay put and tokens move (grok: E=8 < 16)."""
     from jax.sharding import PartitionSpec as _P
 
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is not None and not am.empty and "model" in am.axis_names:
         if cfg.n_experts % am.shape["model"] == 0:
             return _P("model", None, None)
@@ -130,7 +130,7 @@ def _moe_spec_grouped(cfg: ArchConfig):
     """[B, E, capg, d] dispatch spec: rows over data, experts over model."""
     from jax.sharding import PartitionSpec as _P
 
-    am = jax.sharding.get_abstract_mesh()
+    am = get_abstract_mesh()
     if am is None or am.empty:
         return _P(None, None, None, None)
     dp = tuple(a for a in ("pod", "data") if a in am.axis_names)

@@ -21,7 +21,7 @@ projections of state size N; the chunked form is unconditionally stable
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

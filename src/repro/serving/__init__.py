@@ -1,1 +1,13 @@
-from repro.serving.engine import LatencyStats, ServeConfig, XMRServingEngine
+from repro.serving.batcher import BatchPolicy, MicroBatcher, RequestQueue
+from repro.serving.engine import ServeConfig, XMRServingEngine
+from repro.serving.metrics import LatencyStats, ServerMetrics
+
+__all__ = [
+    "BatchPolicy",
+    "LatencyStats",
+    "MicroBatcher",
+    "RequestQueue",
+    "ServeConfig",
+    "ServerMetrics",
+    "XMRServingEngine",
+]

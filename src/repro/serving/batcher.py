@@ -1,0 +1,271 @@
+"""Async micro-batching front-end for the XMR serving engine.
+
+Production online serving (the paper's §3.2 "online" setting under real
+traffic) is not one query at a time: a real-time batcher sits in front of
+the tree scorer and coalesces in-flight requests so device dispatch overhead
+is amortized — the same economics as the paper's batch-parallelism study
+(Fig. 6). This module provides that front-end:
+
+* :class:`RequestQueue` — thread-safe queue with the two classic coalescing
+  triggers: **size** (``max_batch`` requests waiting) and **deadline** (the
+  oldest request has waited ``max_wait_ms``).
+* :class:`MicroBatcher` — a worker thread that drains the queue, marshals
+  each micro-batch through the vectorized CSR→ELL path into the engine's
+  power-of-two jit buckets, and resolves per-request futures. Dispatch is
+  double-buffered: because JAX dispatch is asynchronous, batch *i+1* is
+  marshalled on the host while the device executes batch *i*.
+
+Results are bitwise-identical to per-query serving: bucket padding rows are
+empty sentinel queries and the padded tail is sliced off before futures
+resolve (pinned by tests/test_serving.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.serving.engine import XMRServingEngine
+from repro.serving.metrics import ServerMetrics
+from repro.sparse.csr import CSR
+
+TRIGGER_SIZE = "size"
+TRIGGER_DEADLINE = "deadline"
+TRIGGER_FLUSH = "flush"
+
+
+@dataclasses.dataclass
+class BatchPolicy:
+    """Coalescing policy: dispatch when either trigger fires."""
+
+    max_batch: int = 16       # size trigger
+    max_wait_ms: float = 2.0  # deadline trigger (oldest request's max wait)
+
+
+@dataclasses.dataclass
+class _Request:
+    idx: np.ndarray           # sorted feature ids, int32
+    val: np.ndarray           # float32 values
+    future: Future
+    t_enqueue: float
+
+
+class RequestQueue:
+    """Thread-safe request queue with size/deadline batch formation."""
+
+    def __init__(self) -> None:
+        self._q: deque[_Request] = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._q)
+
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
+
+    def put(self, req: _Request) -> None:
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("RequestQueue is closed")
+            self._q.append(req)
+            self._cond.notify_all()
+
+    def close(self) -> None:
+        """No further puts; pending requests are still drained."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def _pop(self, k: int) -> List[_Request]:
+        out = []
+        while self._q and len(out) < k:
+            out.append(self._q.popleft())
+        return out
+
+    def next_batch(
+        self, max_batch: int, max_wait_s: float, *, block: bool = True
+    ) -> Tuple[Optional[List[_Request]], str]:
+        """Form the next micro-batch.
+
+        Returns ``(requests, trigger)``. ``(None, "")`` means closed and
+        drained. With ``block=False``, returns ``([], "")`` immediately when
+        no trigger has fired yet (used by the double-buffered worker to
+        overlap marshalling with device compute).
+        """
+        with self._cond:
+            while True:
+                if self._q:
+                    if len(self._q) >= max_batch:
+                        return self._pop(max_batch), TRIGGER_SIZE
+                    if self._closed:
+                        return self._pop(max_batch), TRIGGER_FLUSH
+                    deadline = self._q[0].t_enqueue + max_wait_s
+                    now = time.perf_counter()
+                    if now >= deadline:
+                        return self._pop(max_batch), TRIGGER_DEADLINE
+                    if not block:
+                        return [], ""
+                    self._cond.wait(timeout=deadline - now)
+                else:
+                    if self._closed:
+                        return None, ""
+                    if not block:
+                        return [], ""
+                    self._cond.wait(timeout=0.1)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    reqs: List[_Request]
+    scores: jax.Array
+    labels: jax.Array
+    t_dequeue: float
+    bucket: int
+    trigger: str
+
+
+class MicroBatcher:
+    """Coalescing async server over an :class:`XMRServingEngine`.
+
+    Usage::
+
+        with MicroBatcher(engine, BatchPolicy(max_batch=16)) as mb:
+            futs = [mb.submit(idx, val) for idx, val in requests]
+            results = [f.result() for f in futs]   # (scores, labels) each
+    """
+
+    def __init__(
+        self,
+        engine: XMRServingEngine,
+        policy: BatchPolicy | None = None,
+        metrics: ServerMetrics | None = None,
+    ) -> None:
+        self.engine = engine
+        self.policy = policy or BatchPolicy()
+        if self.policy.max_batch > engine.config.max_batch:
+            raise ValueError(
+                f"policy.max_batch={self.policy.max_batch} exceeds engine "
+                f"max_batch={engine.config.max_batch}"
+            )
+        self.metrics = metrics or ServerMetrics()
+        self.queue = RequestQueue()
+        self._thread: threading.Thread | None = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> "MicroBatcher":
+        if self._thread is not None:
+            raise RuntimeError("MicroBatcher already started")
+        if self.queue.closed:
+            raise RuntimeError("MicroBatcher cannot be restarted after stop()")
+        self._thread = threading.Thread(
+            target=self._worker, name="xmr-microbatcher", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop accepting requests, drain the queue, join the worker."""
+        self.queue.close()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "MicroBatcher":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- client API ---------------------------------------------------------
+    def submit(self, idx: np.ndarray, val: np.ndarray) -> Future:
+        """Enqueue one sparse query; resolves to (scores [k], labels [k])."""
+        fut: Future = Future()
+        self.queue.put(
+            _Request(
+                idx=np.asarray(idx, np.int32),
+                val=np.asarray(val, np.float32),
+                future=fut,
+                t_enqueue=time.perf_counter(),
+            )
+        )
+        return fut
+
+    def submit_csr(self, queries: CSR) -> List[Future]:
+        return [self.submit(*queries.row(i)) for i in range(queries.shape[0])]
+
+    # -- worker -------------------------------------------------------------
+    def _dispatch(self, reqs: List[_Request], trigger: str) -> _InFlight:
+        t_dequeue = time.perf_counter()
+        d = self.engine.tree.d
+        sub = CSR.from_rows(
+            [r.idx for r in reqs], [r.val for r in reqs], (len(reqs), d)
+        )
+        bucket = self.engine.bucket_for(len(reqs))
+        xi, xv = self.engine.marshal_rows(sub, np.arange(len(reqs)), bucket)
+        s, l = self.engine._run(xi, xv)  # async dispatch — do not block here
+        return _InFlight(reqs, s, l, t_dequeue, bucket, trigger)
+
+    def _finalize(self, inflight: _InFlight) -> None:
+        jax.block_until_ready((inflight.scores, inflight.labels))
+        t_done = time.perf_counter()
+        s = np.asarray(inflight.scores)
+        l = self.engine._map_labels(np.asarray(inflight.labels))
+        for i, req in enumerate(inflight.reqs):
+            req.future.set_result((s[i], l[i]))
+        self.metrics.record_batch(
+            t_enqueue=[r.t_enqueue for r in inflight.reqs],
+            t_dequeue=inflight.t_dequeue,
+            t_done=t_done,
+            bucket=inflight.bucket,
+            trigger=inflight.trigger,
+        )
+
+    def _fail(self, reqs: List[_Request], exc: BaseException) -> None:
+        for r in reqs:
+            if not r.future.done():
+                r.future.set_exception(exc)
+
+    def _worker(self) -> None:
+        p = self.policy
+        wait_s = 1e-3 * p.max_wait_ms
+        pending: _InFlight | None = None
+        while True:
+            if pending is None:
+                reqs, trigger = self.queue.next_batch(p.max_batch, wait_s)
+                if reqs is None:
+                    break
+                try:
+                    pending = self._dispatch(reqs, trigger)
+                except BaseException as exc:  # noqa: BLE001 — fail the batch, keep serving
+                    self._fail(reqs, exc)
+            else:
+                reqs, trigger = self.queue.next_batch(
+                    p.max_batch, wait_s, block=False
+                )
+                nxt = None
+                if reqs:
+                    try:
+                        nxt = self._dispatch(reqs, trigger)
+                    except BaseException as exc:  # noqa: BLE001
+                        self._fail(reqs, exc)
+                try:
+                    self._finalize(pending)
+                except BaseException as exc:  # noqa: BLE001
+                    self._fail(pending.reqs, exc)
+                pending = nxt
+        if pending is not None:
+            try:
+                self._finalize(pending)
+            except BaseException as exc:  # noqa: BLE001
+                self._fail(pending.reqs, exc)

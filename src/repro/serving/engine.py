@@ -7,20 +7,28 @@ Implements the paper's two production settings (§3.2):
 The engine owns jit-cache hygiene (batch sizes are bucketed to powers of two,
 query nnz padded to a fixed ELL width) and records per-query wall-clock
 statistics in the form the paper reports (avg / P95 / P99, Table 4).
+
+Query marshalling is the vectorized CSR→ELL path in
+:func:`repro.sparse.csr.rows_to_ell`; ``serve_batch`` double-buffers so host
+marshalling of chunk *i+1* overlaps device execution of chunk *i* (JAX
+dispatch is asynchronous — we only block when the *previous* chunk's results
+are consumed). The async micro-batching front-end lives in
+:mod:`repro.serving.batcher`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tree import XMRTree
-from repro.sparse.csr import CSR
+from repro.serving.metrics import LatencyStats
+from repro.sparse.csr import CSR, rows_to_ell
 
 
 @dataclasses.dataclass
@@ -31,26 +39,6 @@ class ServeConfig:
     ell_width: int = 256          # query nnz cap (pad/truncate)
     max_batch: int = 256
     score_mode: str = "prod"
-
-
-@dataclasses.dataclass
-class LatencyStats:
-    per_query_ms: List[float] = dataclasses.field(default_factory=list)
-
-    def record(self, total_s: float, n_queries: int) -> None:
-        self.per_query_ms.append(1e3 * total_s / max(n_queries, 1))
-
-    def summary(self) -> dict:
-        if not self.per_query_ms:
-            return {"count": 0}
-        arr = np.asarray(self.per_query_ms)
-        return {
-            "count": len(arr),
-            "avg_ms": float(arr.mean()),
-            "p50_ms": float(np.percentile(arr, 50)),
-            "p95_ms": float(np.percentile(arr, 95)),
-            "p99_ms": float(np.percentile(arr, 99)),
-        }
 
 
 def _bucket(n: int, max_batch: int) -> int:
@@ -70,16 +58,29 @@ class XMRServingEngine:
 
     # -- query marshalling --------------------------------------------------
     def _to_ell(self, queries: CSR, start: int, count: int) -> Tuple[jax.Array, jax.Array]:
+        idx, val = rows_to_ell(
+            queries, np.arange(start, start + count), self.config.ell_width
+        )
+        return jnp.asarray(idx), jnp.asarray(val)
+
+    def marshal_rows(self, queries: CSR, rows: np.ndarray, bucket: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """Vectorized ELL marshalling padded up to a jit bucket.
+
+        Padding rows use the sentinel index ``d`` and value 0, i.e. empty
+        queries — the bucket tail is sliced off by the caller.
+        """
         w = self.config.ell_width
         d = queries.shape[1]
-        idx = np.full((count, w), d, np.int32)
-        val = np.zeros((count, w), np.float32)
-        for i in range(count):
-            ri, rv = queries.row(start + i)
-            k = min(len(ri), w)
-            idx[i, :k] = ri[:k]
-            val[i, :k] = rv[:k]
+        idx, val = rows_to_ell(queries, rows, w)
+        if bucket > len(rows):
+            pad = bucket - len(rows)
+            idx = np.concatenate([idx, np.full((pad, w), d, np.int32)])
+            val = np.concatenate([val, np.zeros((pad, w), np.float32)])
         return jnp.asarray(idx), jnp.asarray(val)
+
+    def bucket_for(self, n: int) -> int:
+        return _bucket(n, self.config.max_batch)
 
     def _run(self, xi: jax.Array, xv: jax.Array):
         c = self.config
@@ -96,30 +97,52 @@ class XMRServingEngine:
             s, l = self._run(xi, xv)
             jax.block_until_ready((s, l))
 
+    def warmup_buckets(self, d: int, max_batch: int) -> None:
+        """Warm every jit bucket a batcher capped at ``max_batch`` can form.
+
+        Covers all power-of-two buckets up to ``bucket_for(max_batch)``
+        inclusive — note the cap itself need not be a power of two (a
+        size-triggered batch of 24 pads to bucket 32).
+        """
+        sizes, b = [], 1
+        target = self.bucket_for(max_batch)
+        while b <= target:
+            sizes.append(b)
+            b *= 2
+        self.warmup(d, sizes)
+
     def serve_batch(self, queries: CSR) -> Tuple[np.ndarray, np.ndarray]:
-        """Batch setting: all queries at once (bucketed into max_batch chunks)."""
+        """Batch setting: all queries at once (bucketed into max_batch chunks).
+
+        Double-buffered: chunk *i+1* is marshalled on the host while the
+        device executes chunk *i*. Because chunks overlap, per-chunk wall
+        times are not individually meaningful — one amortized per-query
+        latency is recorded per call (the paper's batch-setting metric).
+        """
         n = queries.shape[0]
         out_s, out_l = [], []
+
+        def finalize(pending) -> None:
+            s, l, count = pending
+            jax.block_until_ready((s, l))
+            out_s.append(np.asarray(s)[:count])
+            out_l.append(np.asarray(l)[:count])
+
+        t_start = time.perf_counter()
+        pending = None
         i = 0
         while i < n:
             count = min(self.config.max_batch, n - i)
             bucket = _bucket(count, self.config.max_batch)
-            xi, xv = self._to_ell(queries, i, count)
-            if bucket > count:  # pad to the jit bucket
-                d = queries.shape[1]
-                xi = jnp.concatenate(
-                    [xi, jnp.full((bucket - count, xi.shape[1]), d, jnp.int32)]
-                )
-                xv = jnp.concatenate(
-                    [xv, jnp.zeros((bucket - count, xv.shape[1]), jnp.float32)]
-                )
-            t0 = time.perf_counter()
-            s, l = self._run(xi, xv)
-            jax.block_until_ready((s, l))
-            self.stats.record(time.perf_counter() - t0, count)
-            out_s.append(np.asarray(s)[:count])
-            out_l.append(np.asarray(l)[:count])
+            xi, xv = self.marshal_rows(queries, np.arange(i, i + count), bucket)
+            s, l = self._run(xi, xv)  # async dispatch
+            if pending is not None:
+                finalize(pending)
+            pending = (s, l, count)
             i += count
+        if pending is not None:
+            finalize(pending)
+        self.stats.record(time.perf_counter() - t_start, n)
         scores = np.concatenate(out_s)
         leaves = np.concatenate(out_l)
         return scores, self._map_labels(leaves)

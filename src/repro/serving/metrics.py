@@ -1,0 +1,131 @@
+"""Serving-side metrics.
+
+:class:`LatencyStats` is the per-query wall-clock recorder the paper's
+Table 4 reports (avg / P50 / P95 / P99). :class:`ServerMetrics` extends it
+for the async micro-batching engine: each request is decomposed into
+queue-wait (enqueue → batch formed) and compute (batch dispatch → results
+ready), plus whole-run throughput (QPS) and per-batch coalescing
+diagnostics (size vs deadline trigger, bucket occupancy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List
+
+import numpy as np
+
+
+def _percentiles(arr: np.ndarray) -> Dict[str, float]:
+    return {
+        "avg_ms": float(arr.mean()),
+        "p50_ms": float(np.percentile(arr, 50)),
+        "p95_ms": float(np.percentile(arr, 95)),
+        "p99_ms": float(np.percentile(arr, 99)),
+    }
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    per_query_ms: List[float] = dataclasses.field(default_factory=list)
+
+    def record(self, total_s: float, n_queries: int) -> None:
+        self.per_query_ms.append(1e3 * total_s / max(n_queries, 1))
+
+    def summary(self) -> dict:
+        if not self.per_query_ms:
+            return {"count": 0}
+        arr = np.asarray(self.per_query_ms)
+        return {"count": len(arr), **_percentiles(arr)}
+
+
+@dataclasses.dataclass
+class ServerMetrics:
+    """End-to-end request accounting for the micro-batching server.
+
+    Thread-safe: the batcher worker records batches while client threads
+    read summaries.
+    """
+
+    queue_wait_ms: List[float] = dataclasses.field(default_factory=list)
+    compute_ms: List[float] = dataclasses.field(default_factory=list)
+    e2e_ms: List[float] = dataclasses.field(default_factory=list)
+    batch_sizes: List[int] = dataclasses.field(default_factory=list)
+    bucket_sizes: List[int] = dataclasses.field(default_factory=list)
+    triggers: List[str] = dataclasses.field(default_factory=list)
+    _t_first: float | None = None
+    _t_last: float | None = None
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False
+    )
+
+    def record_batch(
+        self,
+        *,
+        t_enqueue: List[float],
+        t_dequeue: float,
+        t_done: float,
+        bucket: int,
+        trigger: str,
+    ) -> None:
+        """Record one dispatched micro-batch of len(t_enqueue) requests."""
+        compute = 1e3 * (t_done - t_dequeue)
+        with self._lock:
+            for te in t_enqueue:
+                self.queue_wait_ms.append(1e3 * (t_dequeue - te))
+                self.e2e_ms.append(1e3 * (t_done - te))
+            self.compute_ms.append(compute)
+            self.batch_sizes.append(len(t_enqueue))
+            self.bucket_sizes.append(bucket)
+            self.triggers.append(trigger)
+            first = min(t_enqueue)
+            if self._t_first is None or first < self._t_first:
+                self._t_first = first
+            if self._t_last is None or t_done > self._t_last:
+                self._t_last = t_done
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return len(self.e2e_ms)
+
+    def summary(self) -> dict:
+        with self._lock:
+            if not self.e2e_ms:
+                return {"count": 0}
+            e2e = np.asarray(self.e2e_ms)
+            wait = np.asarray(self.queue_wait_ms)
+            comp = np.asarray(self.compute_ms)
+            sizes = np.asarray(self.batch_sizes)
+            wall_s = max(self._t_last - self._t_first, 1e-9)
+            trig = {
+                t: self.triggers.count(t) for t in sorted(set(self.triggers))
+            }
+            return {
+                "count": len(e2e),
+                **_percentiles(e2e),
+                "queue_wait_avg_ms": float(wait.mean()),
+                "compute_avg_ms": float(comp.mean()),
+                "compute_per_query_avg_ms": float(
+                    comp.sum() / max(sizes.sum(), 1)
+                ),
+                "qps": float(len(e2e) / wall_s),
+                "batches": len(sizes),
+                "avg_batch": float(sizes.mean()),
+                "triggers": trig,
+            }
+
+    def table4_row(self, name: str) -> str:
+        """One line in the paper's Table-4 latency panel format."""
+        s = self.summary()
+        if not s["count"]:
+            return f"{name:24s} (no requests)"
+        return (
+            f"{name:24s} avg {s['avg_ms']:7.3f} ms/q   "
+            f"p50 {s['p50_ms']:7.3f}   p95 {s['p95_ms']:7.3f}   "
+            f"p99 {s['p99_ms']:7.3f}   "
+            f"wait {s['queue_wait_avg_ms']:6.3f}   "
+            f"compute {s['compute_per_query_avg_ms']:6.3f}   "
+            f"{s['qps']:8.1f} QPS"
+        )

@@ -8,6 +8,30 @@ import numpy as np
 import pytest
 
 
+def _has_tpu() -> bool:
+    import jax
+
+    try:
+        return any(d.platform == "tpu" for d in jax.devices())
+    except RuntimeError:
+        return False
+
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-skip ``tpu``-marked tests when no TPU device is present.
+
+    ``slow`` is a plain registered marker — deselect with ``-m "not slow"``
+    (what CI does); it carries no auto-skip so a full local run still
+    exercises everything.
+    """
+    tpu_items = [item for item in items if "tpu" in item.keywords]
+    if not tpu_items or _has_tpu():
+        return  # don't initialize the JAX backend unless the marker is used
+    skip_tpu = pytest.mark.skip(reason="no TPU device present")
+    for item in tpu_items:
+        item.add_marker(skip_tpu)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(1234)

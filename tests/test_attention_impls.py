@@ -6,13 +6,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config, reduced_config
 from repro.launch.specs import make_demo_batch
 from repro.models import attention as A
 from repro.models import lm as lm_lib
-from repro.models.common import ArchConfig
 
 
 @settings(max_examples=12, deadline=None)

@@ -2,10 +2,12 @@
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.chunked import ChunkedLayer, ColumnELLLayer
-from repro.sparse import CSC, CSR, random_sparse_csc, random_sparse_csr
+from repro.sparse import random_sparse_csc, random_sparse_csr
 
 
 def test_chunked_roundtrip_exact(rng):

@@ -7,6 +7,8 @@ same masked product as the vanilla per-column baseline, for every iterator.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import mscm as M

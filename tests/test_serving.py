@@ -1,0 +1,234 @@
+"""Serving subsystem: vectorized marshalling, coalescing triggers, padding.
+
+Pins the three properties the async engine must not break:
+1. the vectorized CSR→ELL path equals the per-row loop oracle;
+2. the RequestQueue fires on exactly the documented triggers
+   (size / deadline / close-flush);
+3. bucket padding is invisible — micro-batched results are bitwise-identical
+   to per-query serving.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import XMRTree
+from repro.serving import (
+    BatchPolicy,
+    MicroBatcher,
+    ServeConfig,
+    XMRServingEngine,
+)
+from repro.serving.batcher import (
+    TRIGGER_DEADLINE,
+    TRIGGER_FLUSH,
+    TRIGGER_SIZE,
+    RequestQueue,
+    _Request,
+)
+from repro.sparse import (
+    random_sparse_csr,
+    rows_to_ell,
+    rows_to_ell_loop,
+)
+from tests.conftest import make_tree_weights
+
+
+# ---------------------------------------------------------------------------
+# 1. vectorized CSR→ELL vs the per-row loop oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [None, 1, 4, 64])
+def test_rows_to_ell_matches_loop(rng, width):
+    x = random_sparse_csr(40, 300, 12, rng)
+    for rows in (
+        np.arange(40),
+        np.array([0, 39, 7, 7, 20]),   # arbitrary order, duplicates
+        np.zeros(0, np.int64),         # empty selection
+    ):
+        vi, vv = rows_to_ell(x, rows, width)
+        li, lv = rows_to_ell_loop(x, rows, width)
+        np.testing.assert_array_equal(vi, li)
+        np.testing.assert_array_equal(vv, lv)
+
+
+def test_rows_to_ell_truncation_and_sentinel(rng):
+    x = random_sparse_csr(8, 100, 20, rng)
+    w = 5
+    idx, val = rows_to_ell(x, np.arange(8), w)
+    assert idx.shape == (8, w) and val.shape == (8, w)
+    for i in range(8):
+        ri, rv = x.row(i)
+        k = min(len(ri), w)
+        np.testing.assert_array_equal(idx[i, :k], ri[:k])
+        assert (idx[i, k:] == 100).all() and (val[i, k:] == 0).all()
+
+
+def test_to_ell_uses_vectorized_path(rng):
+    x = random_sparse_csr(25, 200, 10, rng)
+    vi, vv = x.to_ell()
+    li, lv = rows_to_ell_loop(x, np.arange(25), None)
+    np.testing.assert_array_equal(vi, li)
+    np.testing.assert_array_equal(vv, lv)
+
+
+def test_rows_to_ell_empty_rows(rng):
+    from repro.sparse.csr import CSR
+
+    x = CSR.from_dense(np.zeros((3, 10), np.float32))
+    idx, val = rows_to_ell(x, np.arange(3), 4)
+    assert (idx == 10).all() and (val == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# 2. RequestQueue coalescing triggers (tested directly, no worker thread)
+# ---------------------------------------------------------------------------
+
+def _req(t=None):
+    from concurrent.futures import Future
+
+    return _Request(
+        idx=np.zeros(1, np.int32),
+        val=np.zeros(1, np.float32),
+        future=Future(),
+        t_enqueue=time.perf_counter() if t is None else t,
+    )
+
+
+def test_size_trigger_fires_immediately():
+    q = RequestQueue()
+    for _ in range(20):
+        q.put(_req())
+    t0 = time.perf_counter()
+    batch, trigger = q.next_batch(16, max_wait_s=10.0)
+    assert trigger == TRIGGER_SIZE
+    assert len(batch) == 16
+    assert time.perf_counter() - t0 < 1.0  # did not wait for the deadline
+    assert len(q) == 4
+
+
+def test_deadline_trigger_fires_after_wait():
+    q = RequestQueue()
+    for _ in range(3):
+        q.put(_req())
+    t0 = time.perf_counter()
+    batch, trigger = q.next_batch(16, max_wait_s=0.05)
+    waited = time.perf_counter() - t0
+    assert trigger == TRIGGER_DEADLINE
+    assert len(batch) == 3
+    assert waited >= 0.04  # held for the deadline, not a spurious wakeup
+
+
+def test_close_flushes_partial_batch():
+    q = RequestQueue()
+    q.put(_req())
+    q.close()
+    batch, trigger = q.next_batch(16, max_wait_s=60.0)
+    assert trigger == TRIGGER_FLUSH and len(batch) == 1
+    batch, _ = q.next_batch(16, max_wait_s=60.0)
+    assert batch is None  # closed + drained
+    with pytest.raises(RuntimeError):
+        q.put(_req())
+
+
+def test_nonblocking_poll_returns_empty():
+    q = RequestQueue()
+    q.put(_req())  # present but neither trigger fired
+    batch, trigger = q.next_batch(16, max_wait_s=60.0, block=False)
+    assert batch == [] and trigger == ""
+
+
+# ---------------------------------------------------------------------------
+# 3. end-to-end micro-batching vs per-query serving
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serving_setup():
+    rng = np.random.default_rng(7)
+    d, B = 200, 8
+    ws = make_tree_weights(rng, d, [8, 64, 512], B)
+    tree = XMRTree.from_weight_matrices(ws, B)
+    engine = XMRServingEngine(tree, ServeConfig(ell_width=32, max_batch=64))
+    engine.warmup(d, batch_sizes=(1, 2, 4, 8, 16))
+    queries = random_sparse_csr(45, d, 15, rng)  # 45: forces a ragged tail
+    ref_s, ref_l = engine.serve_online(queries)
+    return engine, queries, ref_s, ref_l
+
+
+def test_microbatch_bitwise_equals_per_query(serving_setup):
+    engine, queries, ref_s, ref_l = serving_setup
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=16, max_wait_ms=5.0))
+    futs = mb.submit_csr(queries)  # enqueue before start: deterministic coalescing
+    mb.start()
+    res = [f.result(timeout=60) for f in futs]
+    mb.stop()
+    np.testing.assert_array_equal(np.stack([r[0] for r in res]), ref_s)
+    np.testing.assert_array_equal(np.stack([r[1] for r in res]), ref_l)
+    s = mb.metrics.summary()
+    assert s["count"] == queries.shape[0]
+    # 45 requests at max_batch=16 → two size-triggered 16s + a 13 tail
+    assert TRIGGER_SIZE in s["triggers"]
+    assert max(mb.metrics.batch_sizes) == 16
+
+
+def test_bucket_padding_invisible(serving_setup):
+    """13 requests pad to the 16-bucket; results equal the unpadded run."""
+    engine, queries, ref_s, ref_l = serving_setup
+    sub = queries.slice_rows(np.arange(13))
+    xi, xv = engine.marshal_rows(sub, np.arange(13), bucket=16)
+    assert xi.shape[0] == 16
+    s, l = engine._run(xi, xv)
+    np.testing.assert_array_equal(np.asarray(s)[:13], ref_s[:13])
+    np.testing.assert_array_equal(np.asarray(l)[:13], ref_l[:13])
+    # padding rows are empty sentinel queries
+    assert (np.asarray(xi)[13:] == queries.shape[1]).all()
+
+
+def test_deadline_batches_resolve_without_size_trigger(serving_setup):
+    engine, queries, ref_s, ref_l = serving_setup
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=16, max_wait_ms=10.0))
+    mb.start()
+    futs = mb.submit_csr(queries.slice_rows(np.arange(3)))
+    res = [f.result(timeout=60) for f in futs]  # resolves via deadline, not size
+    mb.stop()
+    np.testing.assert_array_equal(np.stack([r[0] for r in res]), ref_s[:3])
+    np.testing.assert_array_equal(np.stack([r[1] for r in res]), ref_l[:3])
+    trig = mb.metrics.summary()["triggers"]
+    assert TRIGGER_SIZE not in trig
+    assert TRIGGER_DEADLINE in trig or TRIGGER_FLUSH in trig
+
+
+def test_serve_batch_matches_online(serving_setup):
+    engine, queries, ref_s, ref_l = serving_setup
+    s, l = engine.serve_batch(queries)
+    np.testing.assert_array_equal(s, ref_s)
+    np.testing.assert_array_equal(l, ref_l)
+
+
+def test_label_perm_applied_through_batcher(serving_setup):
+    engine, queries, ref_s, ref_l = serving_setup
+    perm = np.arange(engine.tree.n_labels)[::-1].copy()
+    eng2 = XMRServingEngine(engine.tree, engine.config, label_perm=perm)
+    with MicroBatcher(eng2, BatchPolicy(max_batch=16, max_wait_ms=5.0)) as mb:
+        res = [f.result(timeout=60) for f in mb.submit_csr(queries)]
+    np.testing.assert_array_equal(np.stack([r[1] for r in res]), perm[ref_l])
+
+
+@pytest.mark.slow
+def test_poisson_stream_under_load(serving_setup):
+    """Open-loop arrivals: every request resolves, metrics stay consistent."""
+    engine, queries, ref_s, ref_l = serving_setup
+    rng = np.random.default_rng(3)
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=8, max_wait_ms=1.0))
+    mb.start()
+    futs = []
+    for i in range(queries.shape[0]):
+        time.sleep(float(rng.exponential(2e-4)))
+        futs.append(mb.submit(*queries.row(i)))
+    res = [f.result(timeout=60) for f in futs]
+    mb.stop()
+    np.testing.assert_array_equal(np.stack([r[0] for r in res]), ref_s)
+    s = mb.metrics.summary()
+    assert s["count"] == queries.shape[0]
+    assert sum(mb.metrics.batch_sizes) == queries.shape[0]

@@ -1,6 +1,5 @@
 """Unit tests: sharding rule engine + HLO collective parser (pure host)."""
 
-import numpy as np
 import pytest
 
 from repro.launch.hlo_stats import _shape_bytes, collective_stats
