@@ -35,14 +35,17 @@ from repro.serving import (
 )
 
 
-def _build_engine(max_labels: int, max_batch: int, seed: int):
+def _build_engine(max_labels: int, max_batch: int, seed: int,
+                  method: str = "auto"):
     shape = PAPER_SHAPES["eurlex-4k"]
     if shape.L > max_labels:
         shape = scaled_shape(shape, max_labels / shape.L)
     rng = np.random.default_rng(seed)
     tree = build_benchmark_tree(shape, 16, rng)
     engine = XMRServingEngine(
-        tree, ServeConfig(ell_width=256, max_batch=max(64, max_batch))
+        tree,
+        ServeConfig(ell_width=256, max_batch=max(64, max_batch),
+                    method=method),
     )
     # Warm every bucket the batcher can form, so odd-size deadline batches
     # never hit a fresh jit compile mid-measurement.
@@ -57,8 +60,9 @@ def run(
     max_wait_ms: float = 2.0,
     max_labels: int = 4096,
     seed: int = 0,
+    method: str = "auto",
 ) -> List[str]:
-    shape, engine, rng = _build_engine(max_labels, max_batch, seed)
+    shape, engine, rng = _build_engine(max_labels, max_batch, seed, method)
     queries = benchmark_queries(shape, n_queries, rng)
     lines = []
 
@@ -135,12 +139,16 @@ def main(argv=None) -> List[str]:
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--max-labels", type=int, default=4096)
+    ap.add_argument("--method", default="auto",
+                    help='masked-matmul method ("auto" resolves per backend;'
+                         ' e.g. mscm_pallas_grouped on TPU)')
     args = ap.parse_args(argv)
     lines = run(
         n_queries=args.n,
         max_batch=args.max_batch,
         max_wait_ms=args.max_wait_ms,
         max_labels=args.max_labels,
+        method=args.method,
     )
     for line in lines:
         print(line)

@@ -1,0 +1,126 @@
+"""Compare a fresh benchmark JSON against the committed baseline artifact.
+
+CI runs the benchmark smoke (``python -m benchmarks.run --json
+BENCH_ci.json``) and then::
+
+    python -m benchmarks.check_regression BENCH_ci.json
+
+Rows are matched by name against ``benchmarks/BENCH_baseline.json`` (skipped
+gracefully when no baseline is committed). Timing rows (``us_per_call``) are
+compared as ratios; shared-runner drift makes hard timing gates flaky, so by
+default regressions are *reported* and only ``--strict`` turns them into a
+nonzero exit. Structural rows are always strict: a ``bitwise_identical=False``
+or ``amortizes=False`` flag in any derived field fails the check regardless
+of mode — those encode correctness/shape claims, not wall-clock.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
+
+# Tile-count and share rows are deterministic counters, not timings; hold
+# them to an exact-ish tolerance instead of the timing ratio.
+COUNTER_MARKERS = ("_tiles", "_share_", "matmul_share")
+
+
+def _rows_by_name(doc: dict) -> Dict[str, dict]:
+    return {r["name"]: r for r in doc.get("rows", []) if "name" in r}
+
+
+def _is_counter(name: str) -> bool:
+    return any(m in name for m in COUNTER_MARKERS)
+
+
+def compare(
+    current: dict, baseline: dict, max_ratio: float
+) -> Tuple[List[str], List[str]]:
+    """Returns (report_lines, failures). Failures are structural or — for
+    timing rows — ratio breaches beyond ``max_ratio``."""
+    cur, base = _rows_by_name(current), _rows_by_name(baseline)
+    report: List[str] = []
+    failures: List[str] = []
+    for name, row in sorted(cur.items()):
+        derived = row.get("derived", "")
+        if "bitwise_identical=False" in derived or "amortizes=False" in derived:
+            failures.append(f"{name}: structural flag failed ({derived})")
+        b = base.get(name)
+        if b is None or b.get("us_per_call", 0) <= 0:
+            continue
+        ratio = row["us_per_call"] / b["us_per_call"]
+        tag = ""
+        if _is_counter(name):
+            if ratio > 1.02:  # counters should not grow
+                tag = "  << COUNTER REGRESSION"
+                failures.append(f"{name}: counter {b['us_per_call']:.0f} -> "
+                                f"{row['us_per_call']:.0f}")
+        elif ratio > max_ratio:
+            tag = f"  << {ratio:.2f}x SLOWER than baseline"
+            failures.append(f"{name}: {ratio:.2f}x over baseline "
+                            f"({b['us_per_call']:.1f} -> {row['us_per_call']:.1f} us)")
+        report.append(f"{name:55s} {b['us_per_call']:>12.1f} "
+                      f"{row['us_per_call']:>12.1f} {ratio:>7.2f}x{tag}")
+    missing = sorted(set(base) - set(cur))
+    for name in missing:
+        line = f"{name:55s} (row disappeared from current run)"
+        b_derived = base[name].get("derived", "")
+        if (_is_counter(name) or "bitwise_identical=" in b_derived
+                or "amortizes=" in b_derived):
+            # Dropping a structural row must not quietly pass the gate —
+            # that would erase exactly the coverage this check exists for.
+            failures.append(
+                f"{name}: structural/counter row missing from current run"
+            )
+            line += "  << MISSING STRUCTURAL ROW"
+        report.append(line)
+    return report, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH json (e.g. BENCH_ci.json)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--max-ratio", type=float, default=4.0,
+                    help="timing ratio above which a row is flagged")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on flagged timing rows (structural "
+                         "failures always exit 1)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    if not os.path.exists(args.baseline):
+        print(f"# no baseline at {args.baseline}; skipping comparison")
+        # Structural flags are still checked against the fresh run alone.
+        _, failures = compare(current, {"rows": []}, args.max_ratio)
+        for fail in failures:
+            print(f"FAIL {fail}")
+        return 1 if failures else 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    report, failures = compare(current, baseline, args.max_ratio)
+    print(f"{'name':55s} {'baseline_us':>12s} {'current_us':>12s} {'ratio':>8s}")
+    for line in report:
+        print(line)
+    structural = [f for f in failures if "structural" in f or "counter" in f]
+    timing = [f for f in failures if f not in structural]
+    for fail in failures:
+        print(f"FAIL {fail}")
+    if structural:
+        return 1
+    if timing and args.strict:
+        return 1
+    if timing:
+        print(f"# {len(timing)} timing regression(s) over {args.max_ratio}x "
+              "(non-strict mode: not gating)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

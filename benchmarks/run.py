@@ -75,6 +75,10 @@ def main() -> None:
     emit(bench_mscm.run(mscm_kw["datasets"],
                         max_labels=mscm_kw["max_labels"],
                         n_batch=mscm_kw["n_batch"]))
+    # Device-grouped MXU path (ISSUE 2): per-level tile accounting + the
+    # bitwise-identity flag ride along in BENCH_ci.json.
+    emit(bench_mscm.grouped_report(max_labels=mscm_kw["max_labels"],
+                                   n=mscm_kw["n_batch"]))
     emit(bench_mscm.profile_share())
     emit(bench_napkin.run(max_labels=mscm_kw["max_labels"]))
     emit(bench_parallel.run(max_labels=mscm_kw["max_labels"],

@@ -33,6 +33,38 @@ def combine_scores(
     raise ValueError(f"unknown score mode {mode}")
 
 
+def beam_select(
+    parent_ids: jax.Array,  # int32 [n, b]
+    scores: jax.Array,      # f32 [n, b, B] pre-combined child scores
+    n_cols: int,            # valid columns at this level (masks padding)
+    next_b: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """SelectTop_b over pre-combined child scores (paper Alg. 1 line 9).
+
+    Children ids are parent*B + within-chunk offset; phantom columns from
+    chunk padding (id >= n_cols) are masked to -inf so they never survive.
+
+    Selection is *canonical*: candidates are ordered by (score desc, child
+    id asc) via a two-key sort, so the surviving set — and the order it is
+    returned in — is a pure function of the candidate (id, score) multiset,
+    independent of the beam's layout. That is what lets the grouped MSCM
+    path keep its beam chunk-sorted between levels and still produce
+    bitwise-identical results to every other method, ties included.
+    """
+    n, b, B = scores.shape
+    child_ids = parent_ids[:, :, None] * B + jnp.arange(B)[None, None, :]
+    valid = child_ids < n_cols
+    scores = jnp.where(valid, scores, NEG_INF)
+    neg_sorted, id_sorted = jax.lax.sort(
+        (-scores.reshape(n, b * B), child_ids.reshape(n, b * B)),
+        dimension=1,
+        num_keys=2,
+    )
+    top_scores = -neg_sorted[:, :next_b]
+    top_ids = id_sorted[:, :next_b]
+    return top_ids.astype(jnp.int32), top_scores
+
+
 def beam_step(
     parent_ids: jax.Array,     # int32 [n, b]
     parent_scores: jax.Array,  # f32 [n, b]
@@ -42,18 +74,6 @@ def beam_step(
     *,
     mode: str = "prod",
 ) -> Tuple[jax.Array, jax.Array]:
-    """SelectTop_b over the expanded beam (paper Alg. 1 line 9).
-
-    Children ids are parent*B + within-chunk offset; phantom columns from
-    chunk padding (id >= n_cols) are masked to -inf so they never survive.
-    """
-    n, b, B = logits.shape
+    """Combine (eq. 5) + canonical SelectTop_b (paper Alg. 1 lines 8-9)."""
     scores = combine_scores(parent_scores, logits, mode)              # [n,b,B]
-    child_ids = parent_ids[:, :, None] * B + jnp.arange(B)[None, None, :]
-    valid = child_ids < n_cols
-    scores = jnp.where(valid, scores, NEG_INF)
-    flat_scores = scores.reshape(n, b * B)
-    flat_ids = child_ids.reshape(n, b * B)
-    top_scores, top_pos = jax.lax.top_k(flat_scores, next_b)          # [n, nb]
-    top_ids = jnp.take_along_axis(flat_ids, top_pos, axis=1)
-    return top_ids.astype(jnp.int32), top_scores
+    return beam_select(parent_ids, scores, n_cols, next_b)

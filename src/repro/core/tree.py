@@ -23,16 +23,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mscm as mscm_lib
-from repro.core.beam import beam_step
+from repro.core.beam import beam_select, beam_step
 from repro.core.chunked import ChunkedLayer, ColumnELLLayer
 from repro.sparse.csr import CSC
 
+# Masked-matmul method selection — every entry returns *identical* rankings
+# (the paper's "free of charge" property, pinned by tests); they differ only
+# in how the traversal maps to hardware:
+#
+#   vanilla               per-column sparse dots (paper Alg. 4 baseline).
+#                         Correctness oracle; B× the traversal work.
+#   mscm_dense            dense-lookup MSCM (paper §4 item 4): queries
+#                         scattered into a dense [n, d+1] table, XLA gather +
+#                         einsum. Best non-Pallas batch method; needs the
+#                         dense table to fit (d ≲ a few M).
+#   mscm_searchsorted     binary-search MSCM (paper §4 item 2): no dense
+#                         table, log₂(Q)-depth intersections. Best when d is
+#                         huge or memory-tight; slower than dense per block.
+#   mscm_pallas           Pallas fused kernel: one [1,R]×[R,B] contraction
+#                         per block, in-kernel VMEM gather, chunk-sorted grid
+#                         so each chunk tile is DMA'd once (paper Alg. 3).
+#                         Best online/small-batch TPU path for d ≤ ~1M.
+#   mscm_pallas_pregather Pallas pregather kernel: XLA gathers query rows in
+#                         HBM, kernel streams [1,R]×[R,B]. The huge-d TPU
+#                         path (enterprise d = 4M).
+#   mscm_pallas_grouped   MXU-tiled grouped kernel: blocks packed per chunk
+#                         into QT-row tiles *on device*, one [QT,R]×[R,B]
+#                         matmul per tile with the σ⊗parent beam epilogue
+#                         fused in-kernel. The high-throughput batch TPU
+#                         path — amortizes each chunk tile over up to QT
+#                         queries and keeps the whole traversal in one XLA
+#                         program.
 METHODS = (
-    "vanilla",            # paper Alg. 4 baseline: per-column sparse dots
-    "mscm_dense",         # dense-lookup MSCM (paper item 4)
-    "mscm_searchsorted",  # binary-search MSCM (paper item 2)
-    "mscm_pallas",        # Pallas kernel (fused or pregather by d)
+    "vanilla",
+    "mscm_dense",
+    "mscm_searchsorted",
+    "mscm_pallas",
     "mscm_pallas_pregather",
+    "mscm_pallas_grouped",
 )
 
 
@@ -114,8 +142,15 @@ class XMRTree:
         topk: int = 10,
         method: str = "mscm_dense",
         score_mode: str = "prod",
+        qt: int = 8,
     ) -> Tuple[jax.Array, jax.Array]:
-        """Beam-search inference. Returns (scores [n, k], labels [n, k])."""
+        """Beam-search inference. Returns (scores [n, k], labels [n, k]).
+
+        ``method`` picks the masked-matmul backend (see the table above the
+        ``METHODS`` tuple); ``qt`` is the query-tile height of the grouped
+        Pallas kernel (ignored by other methods). All methods return
+        identical rankings.
+        """
         return _tree_infer(
             tuple(self.layers),
             self.n_cols,
@@ -127,6 +162,7 @@ class XMRTree:
             topk=topk,
             method=method,
             score_mode=score_mode,
+            qt=qt,
         )
 
 
@@ -161,12 +197,23 @@ def _masked_matmul(
         return ops.mscm_pallas(
             x_dense, layer.chunk_rows, layer.chunk_vals, block_q, block_c, variant=variant
         )
+    if method == "mscm_pallas_grouped":
+        # Dispatched directly in _tree_infer: the grouped kernel fuses the
+        # σ⊗parent epilogue with the beam step, which needs the parent
+        # scores this function never sees. Raw logits are available via
+        # ops.mscm_grouped_level(..., mode="none").
+        raise ValueError(
+            "mscm_pallas_grouped is dispatched inside _tree_infer; "
+            "use repro.kernels.ops.mscm_grouped_level for a bare matmul"
+        )
     raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_cols", "branching", "d", "beam", "topk", "method", "score_mode"),
+    static_argnames=(
+        "n_cols", "branching", "d", "beam", "topk", "method", "score_mode", "qt"
+    ),
 )
 def _tree_infer(
     layers: Tuple[TreeLayerArrays, ...],
@@ -180,9 +227,12 @@ def _tree_infer(
     topk: int,
     method: str,
     score_mode: str,
+    qt: int = 8,
 ) -> Tuple[jax.Array, jax.Array]:
     n = x_idx.shape[0]
-    needs_dense = method in ("mscm_dense", "mscm_pallas", "mscm_pallas_pregather")
+    needs_dense = method in (
+        "mscm_dense", "mscm_pallas", "mscm_pallas_pregather", "mscm_pallas_grouped"
+    )
     x_dense = mscm_lib.scatter_dense(x_idx, x_val, d) if needs_dense else None
 
     # Layer 1 is the root: prediction 1 (Alg. 1 line 3); its children form
@@ -197,12 +247,43 @@ def _tree_infer(
         b_cur = parent_ids.shape[1]
         block_q = jnp.repeat(jnp.arange(n, dtype=jnp.int32), b_cur)
         block_c = parent_ids.reshape(-1)
-        logits = _masked_matmul(
-            layer, x_idx, x_val, x_dense, block_q, block_c, branching[li], d, method
-        ).reshape(n, b_cur, branching[li])
         is_last = li == len(layers) - 1
         next_b = min(topk if is_last else beam, n_cols[li])
-        parent_ids, scores = beam_step(
-            parent_ids, scores, logits, n_cols[li], next_b, mode=score_mode
-        )
+        if method == "mscm_pallas_grouped":
+            from repro.kernels import ops  # local import: kernels are optional
+
+            # Grouped path: chunk grouping, MXU-tiled matmul, and the
+            # σ⊗parent epilogue all happen inside the kernel dispatch — the
+            # combined beam scores are the only HBM round-trip per level.
+            combined = ops.mscm_grouped_level(
+                x_dense,
+                layer.chunk_rows,
+                layer.chunk_vals,
+                block_q,
+                block_c,
+                scores.reshape(-1),
+                qt=qt,
+                mode=score_mode,
+            ).reshape(n, b_cur, branching[li])
+            parent_ids, scores = beam_select(
+                parent_ids, combined, n_cols[li], next_b
+            )
+            if not is_last:
+                # Keep the beam id-ascending: children of a sorted beam are
+                # a concatenation of sorted runs, so level l+1's block list
+                # inherits level l's chunk-major discipline and the global
+                # grouping argsort only merges across queries. Selection is
+                # canonical (beam_select), so reordering cannot change
+                # results.
+                perm = jnp.argsort(parent_ids, axis=1)
+                parent_ids = jnp.take_along_axis(parent_ids, perm, axis=1)
+                scores = jnp.take_along_axis(scores, perm, axis=1)
+        else:
+            logits = _masked_matmul(
+                layer, x_idx, x_val, x_dense, block_q, block_c,
+                branching[li], d, method,
+            ).reshape(n, b_cur, branching[li])
+            parent_ids, scores = beam_step(
+                parent_ids, scores, logits, n_cols[li], next_b, mode=score_mode
+            )
     return scores, parent_ids

@@ -5,6 +5,13 @@ from repro.kernels.mscm_kernel import (
     mscm_grouped,
     mscm_pregather,
 )
+from repro.kernels.ops import (
+    group_blocks_device,
+    grouped_tile_bound,
+    mscm_grouped_level,
+    mscm_pallas,
+    mscm_pallas_grouped,
+)
 
 __all__ = [
     "ops",
@@ -12,5 +19,10 @@ __all__ = [
     "mscm_fused",
     "mscm_pregather",
     "mscm_grouped",
+    "mscm_grouped_level",
+    "mscm_pallas",
+    "mscm_pallas_grouped",
     "group_blocks_by_chunk",
+    "group_blocks_device",
+    "grouped_tile_bound",
 ]

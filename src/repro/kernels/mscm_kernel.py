@@ -17,9 +17,14 @@ Kernels
                VMEM): XLA gathers x at chunk rows in HBM, the kernel streams
                the pre-gathered [A, R] rows against chunk tiles.
 ``grouped``    MXU-tiled batch path: blocks grouped per chunk into query
-               tiles of QT rows → one [QT,R]×[R,B] matmul per tile. Grouping
-               is host-side (the serving batcher already owns the block
-               list); this is the high-throughput batch-mode kernel.
+               tiles of QT rows → one [QT,R]×[R,B] matmul per tile, with the
+               beam-search epilogue (σ(logit) ⊗ parent score, paper eq. 5)
+               optionally fused into the kernel body so logits never
+               round-trip through HBM between matmul and beam step. Grouping
+               is device-side (:func:`repro.kernels.ops.group_blocks_device`)
+               so the whole traversal compiles as one XLA program; the
+               host-side :func:`group_blocks_by_chunk` remains as the
+               reference grouping used by tests/benchmark accounting.
 
 Alignment notes (TPU target; interpret mode ignores these):
 * R is padded to a multiple of 8 by ``ChunkedLayer.from_csc`` (f32 sublanes).
@@ -33,7 +38,8 @@ Alignment notes (TPU target; interpret mode ignores these):
 
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -164,36 +170,63 @@ def group_blocks_by_chunk(
     return np.asarray(tiles_c, np.int32), np.stack(tiles_s)
 
 
-def _grouped_body(tc_ref, xg_ref, vals_ref, out_ref):
+def _grouped_body(tc_ref, xg_ref, ps_ref, vals_ref, out_ref, *, mode):
     del tc_ref
-    out_ref[0] = jax.lax.dot_general(
+    acc = jax.lax.dot_general(
         xg_ref[0], vals_ref[0],
         dimension_numbers=(((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32,
     )                                                    # [QT, B]
+    if mode == "prod":
+        acc = jax.nn.sigmoid(acc) * ps_ref[0][:, None]
+    elif mode == "logsum":
+        acc = jax.nn.log_sigmoid(acc) + ps_ref[0][:, None]
+    out_ref[0] = acc
 
 
 def mscm_grouped(
     xg_tiles: jax.Array,   # f32 [T, QT, R] gathered query rows per tile
     vals: jax.Array,       # f32 [C, R, B]
     tile_chunk: jax.Array,  # int32 [T]
+    parent_scores: Optional[jax.Array] = None,  # f32 [T, QT] beam scores
     *,
+    mode: str = "none",
     interpret: bool = False,
 ) -> jax.Array:
+    """Chunk-major query-tile matmul with an optionally fused beam epilogue.
+
+    ``mode``:
+      ``none``    raw logits (the classic masked-matmul contract);
+      ``prod``    σ(logit) · parent_score  (paper eq. 5, probability space);
+      ``logsum``  logσ(logit) + parent_score  (log space).
+
+    The epilogue runs on the [QT, B] accumulator while it is still in VMEM —
+    the combined beam scores are the only thing written back to HBM.
+    """
     t, qt, r = xg_tiles.shape
     c, _, b = vals.shape
+    if mode not in ("none", "prod", "logsum"):
+        raise ValueError(f"unknown epilogue mode {mode!r}")
+    if parent_scores is None:
+        if mode != "none":
+            raise ValueError(
+                f"mode={mode!r} combines with the parent beam scores; pass "
+                "parent_scores (zeros would silently flatten every score)"
+            )
+        parent_scores = jnp.zeros((t, qt), jnp.float32)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(t,),
         in_specs=[
             pl.BlockSpec((1, qt, r), lambda i, tc: (i, 0, 0)),
+            pl.BlockSpec((1, qt), lambda i, tc: (i, 0)),
             pl.BlockSpec((1, r, b), lambda i, tc: (tc[i], 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, qt, b), lambda i, tc: (i, 0, 0)),
     )
     return pl.pallas_call(
-        _grouped_body,
+        functools.partial(_grouped_body, mode=mode),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, qt, b), jnp.float32),
         interpret=interpret,
-    )(tile_chunk, xg_tiles, vals)
+    )(tile_chunk, xg_tiles, parent_scores, vals)

@@ -2,21 +2,27 @@
 
 On CPU (this container) the kernels run with ``interpret=True`` — the kernel
 body executes in Python for correctness validation; TPU is the compile
-target. ``interpret=None`` auto-detects.
+target. ``interpret=None`` auto-detects from the backend; the
+``MSCM_FORCE_INTERPRET`` environment variable (``1``/``0``) overrides the
+auto-detection so CI can pin interpret mode explicitly.
+
+The grouped path is fully device-resident: :func:`group_blocks_device`
+derives the chunk-major query tiles *inside* the jit (no host round-trip),
+so the entire multi-level beam search — scatter, group, matmul tiles,
+epilogue, top-k — compiles as one XLA program (paper §4, Alg. 3).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.mscm import gather_query_rows
 from repro.kernels.mscm_kernel import (
-    group_blocks_by_chunk,
     mscm_fused,
     mscm_grouped,
     mscm_pregather,
@@ -26,9 +32,15 @@ from repro.kernels.mscm_kernel import (
 # VMEM alongside the chunk tile; fall back to the pre-gathered kernel.
 VMEM_ROW_LIMIT = 1 << 20
 
+# Query-tile height of the grouped kernel: rows per [QT, R] x [R, B] matmul.
+DEFAULT_QT = 8
+
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
     if interpret is None:
+        env = os.environ.get("MSCM_FORCE_INTERPRET", "")
+        if env != "":
+            return env.lower() not in ("0", "false", "no")
         return jax.default_backend() != "tpu"
     return bool(interpret)
 
@@ -40,8 +52,119 @@ def sort_blocks_by_chunk(block_q: jax.Array, block_c: jax.Array):
 
 
 def unsort(out_sorted: jax.Array, order: jax.Array) -> jax.Array:
-    return jnp.zeros_like(out_sorted).at[order].set(out_sorted)
+    """Undo a permutation by *gathering* through its inverse.
 
+    ``argsort(order)`` is the inverse permutation; a gather through it is
+    TPU-friendly, unlike the scatter ``zeros.at[order].set(out)`` (scatters
+    serialize on TPU and block fusion with the consumer).
+    """
+    return out_sorted[jnp.argsort(order)]
+
+
+# ---------------------------------------------------------------------------
+# Device-side grouping (paper Alg. 3, in-jit)
+# ---------------------------------------------------------------------------
+
+def grouped_tile_bound(a: int, qt: int, num_chunks: int) -> int:
+    """Static worst-case tile count for A blocks grouped per chunk into
+    QT-row tiles.
+
+    The true count is  Σ_c ceil(m_c / qt)  over the chunks present, which is
+    bounded by ``ceil(A/qt) + #distinct_chunks`` (each chunk wastes at most
+    one ragged tile) and by ``A`` (each tile holds ≥ 1 block). Shapes must be
+    static under jit, so we provision ``min`` of the two; padding tiles are
+    masked out by the caller.
+    """
+    return max(1, min(a, -(-a // qt) + min(num_chunks, a)))
+
+
+def group_blocks_device(
+    block_c: jax.Array, qt: int, num_chunks: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """In-jit, scatter-free grouping of active blocks into per-chunk tiles.
+
+    The static tile count is :func:`grouped_tile_bound`; every construction
+    step is a sort, searchsorted, or gather (no scatters — see ``unsort``).
+
+    Returns
+      tile_chunk [T]      chunk id per tile (padding tiles repeat the last
+                          real chunk so Pallas re-uses the resident tile
+                          instead of DMA-ing a fresh one)
+      tile_src   [T, QT]  index into the *unsorted* block list, -1 = padding
+      order      [A]      chunk-major permutation of the block list
+      flat_pos   [A]      position of sorted block i in the flattened
+                          [T*QT] tile layout (strictly increasing)
+    """
+    a = block_c.shape[0]
+    t = grouped_tile_bound(a, qt, num_chunks)
+    order = jnp.argsort(block_c, stable=True)
+    sc = block_c[order].astype(jnp.int32)                # [A] sorted chunks
+    idx = jnp.arange(a, dtype=jnp.int32)
+    run_start = jnp.searchsorted(sc, sc, side="left").astype(jnp.int32)
+    rank = idx - run_start                               # position in run
+    slot = rank % qt
+    tile_id = jnp.cumsum((slot == 0).astype(jnp.int32)) - 1
+    flat_pos = tile_id * qt + slot                       # strictly increasing
+    # Invert sorted-position -> tile-slot by binary search (gather, not
+    # scatter): flat slot f is occupied iff some flat_pos equals f.
+    fgrid = jnp.arange(t * qt, dtype=flat_pos.dtype)
+    j = jnp.minimum(jnp.searchsorted(flat_pos, fgrid), a - 1)
+    hit = flat_pos[j] == fgrid
+    tile_src = jnp.where(hit, order[j].astype(jnp.int32), -1).reshape(t, qt)
+    # Chunk per tile from its slot-0 occupant; padding tiles (all at the
+    # tail, chunks ascending) inherit the last real chunk via cummax.
+    hit0 = hit.reshape(t, qt)[:, 0]
+    j0 = j.reshape(t, qt)[:, 0]
+    tile_chunk = jax.lax.cummax(jnp.where(hit0, sc[j0], 0))
+    return tile_chunk, tile_src, order, flat_pos
+
+
+def mscm_grouped_level(
+    x_dense: jax.Array,        # f32 [n, Dp]
+    rows: jax.Array,           # int32 [C, R]
+    vals: jax.Array,           # f32 [C, R, B]
+    block_q: jax.Array,        # int32 [A]
+    block_c: jax.Array,        # int32 [A]
+    parent_scores: Optional[jax.Array] = None,  # f32 [A] (beam scores)
+    *,
+    qt: int = DEFAULT_QT,
+    mode: str = "none",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One tree level through the MXU-tiled grouped kernel, fully in-jit.
+
+    Groups the active blocks chunk-major on device, gathers the query rows
+    into [T, QT, R] tiles, runs one [QT, R] x [R, B] matmul per tile with the
+    beam epilogue fused (``mode`` — see :func:`mscm_grouped`), and returns
+    the [A, B] block scores in the original block order via a pure-gather
+    unsort. Traceable: safe to call inside an enclosing jit.
+    """
+    interp = _auto_interpret(interpret)
+    c, _, b = vals.shape
+    tile_chunk, tile_src, order, flat_pos = group_blocks_device(
+        block_c, qt, c
+    )
+    safe_src = jnp.maximum(tile_src, 0)                  # [T, QT]
+    bq = block_q[safe_src]                               # [T, QT]
+    r = rows[tile_chunk]                                 # [T, R]
+    xg = x_dense[bq[..., None], r[:, None, :]]           # [T, QT, R]
+    xg = jnp.where((tile_src >= 0)[..., None], xg, 0.0)
+    ps = None
+    if parent_scores is not None:
+        ps = jnp.where(tile_src >= 0, parent_scores[safe_src], 0.0)
+    tiles = mscm_grouped(
+        xg, vals, tile_chunk, ps, mode=mode, interpret=interp
+    )                                                    # [T, QT, B]
+    # Gather-based unsort: sorted block i lives at tile flat slot
+    # flat_pos[i]; composing with the inverse permutation restores the
+    # original block order without a scatter.
+    flat = tiles.reshape(-1, b)
+    return flat[flat_pos[jnp.argsort(order)]]            # [A, B]
+
+
+# ---------------------------------------------------------------------------
+# Jitted entry points
+# ---------------------------------------------------------------------------
 
 @functools.partial(
     jax.jit, static_argnames=("variant", "sort", "interpret")
@@ -75,33 +198,29 @@ def mscm_pallas(
     return unsort(out, order) if order is not None else out
 
 
+@functools.partial(
+    jax.jit, static_argnames=("qt", "mode", "interpret")
+)
 def mscm_pallas_grouped(
     x_dense: jax.Array,
     rows: jax.Array,
     vals: jax.Array,
-    block_q: np.ndarray,   # host-side block list (serving batcher owns it)
-    block_c: np.ndarray,
+    block_q: jax.Array,
+    block_c: jax.Array,
+    parent_scores: Optional[jax.Array] = None,
     *,
-    qt: int = 8,
+    qt: int = DEFAULT_QT,
+    mode: str = "none",
     interpret: Optional[bool] = None,
 ) -> jax.Array:
-    """Batch-mode MXU-tiled MSCM. Host groups blocks per chunk into QT-row
-    tiles; one [QT,R]x[R,B] matmul per tile. Returns f32 [A, B] in the
-    original block order."""
-    interp = _auto_interpret(interpret)
-    tile_chunk, tile_src = group_blocks_by_chunk(np.asarray(block_c), qt)
-    src = jnp.asarray(tile_src)                    # [T, QT]
-    safe_src = jnp.maximum(src, 0)
-    bq = jnp.asarray(block_q)[safe_src]            # [T, QT]
-    bc = jnp.asarray(tile_chunk)[:, None]          # [T, 1]
-    r = rows[jnp.asarray(tile_chunk)]              # [T, R]
-    xg = x_dense[bq[..., None], r[:, None, :]]     # [T, QT, R]
-    xg = jnp.where((src >= 0)[..., None], xg, 0.0)
-    tiles = mscm_grouped(xg, vals, jnp.asarray(tile_chunk), interpret=interp)
-    a = len(block_c)
-    flat_src = src.reshape(-1)
-    flat_tiles = tiles.reshape(-1, vals.shape[2])
-    # Route padding slots (src == -1) to a scratch row one past the end.
-    dest = jnp.where(flat_src >= 0, flat_src, a)
-    out = jnp.zeros((a + 1, vals.shape[2]), jnp.float32)
-    return out.at[dest].set(flat_tiles)[:a]
+    """Batch-mode MXU-tiled MSCM, grouped *on device* — one XLA program.
+
+    Blocks are packed per chunk into QT-row tiles in-jit
+    (:func:`group_blocks_device`); one [QT, R] x [R, B] matmul per tile, with
+    the beam epilogue fused when ``mode`` is ``prod``/``logsum``. Returns
+    f32 [A, B] in the original block order.
+    """
+    return mscm_grouped_level(
+        x_dense, rows, vals, block_q, block_c, parent_scores,
+        qt=qt, mode=mode, interpret=interpret,
+    )

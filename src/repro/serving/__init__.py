@@ -1,5 +1,5 @@
 from repro.serving.batcher import BatchPolicy, MicroBatcher, RequestQueue
-from repro.serving.engine import ServeConfig, XMRServingEngine
+from repro.serving.engine import ServeConfig, XMRServingEngine, resolve_method
 from repro.serving.metrics import LatencyStats, ServerMetrics
 
 __all__ = [
@@ -10,4 +10,5 @@ __all__ = [
     "ServeConfig",
     "ServerMetrics",
     "XMRServingEngine",
+    "resolve_method",
 ]

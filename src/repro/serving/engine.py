@@ -35,10 +35,28 @@ from repro.sparse.csr import CSR, rows_to_ell
 class ServeConfig:
     beam: int = 10
     topk: int = 10
-    method: str = "mscm_dense"
+    method: str = "auto"          # "auto" resolves per backend (see engine)
     ell_width: int = 256          # query nnz cap (pad/truncate)
     max_batch: int = 256
     score_mode: str = "prod"
+    qt: int = 8                   # grouped-kernel query-tile height
+
+
+def resolve_method(method: str) -> str:
+    """Resolve ``"auto"`` to the best batch method for the active backend.
+
+    On TPU that is the device-grouped MXU-tiled Pallas kernel (the paper's
+    batch-mode fast path, fully inside the ``_tree_infer`` jit); elsewhere
+    the dense-lookup einsum path — Pallas interpret mode is for validation,
+    not speed.
+    """
+    if method != "auto":
+        return method
+    return (
+        "mscm_pallas_grouped"
+        if jax.default_backend() == "tpu"
+        else "mscm_dense"
+    )
 
 
 def _bucket(n: int, max_batch: int) -> int:
@@ -53,6 +71,7 @@ class XMRServingEngine:
                  label_perm: Optional[np.ndarray] = None):
         self.tree = tree
         self.config = config or ServeConfig()
+        self.method = resolve_method(self.config.method)
         self.label_perm = label_perm  # leaf position -> original label id
         self.stats = LatencyStats()
 
@@ -85,7 +104,8 @@ class XMRServingEngine:
     def _run(self, xi: jax.Array, xv: jax.Array):
         c = self.config
         return self.tree.infer(
-            xi, xv, beam=c.beam, topk=c.topk, method=c.method, score_mode=c.score_mode
+            xi, xv, beam=c.beam, topk=c.topk, method=self.method,
+            score_mode=c.score_mode, qt=c.qt,
         )
 
     # -- serving modes --------------------------------------------------

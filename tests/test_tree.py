@@ -75,6 +75,77 @@ def test_online_single_query(small_tree):
         np.testing.assert_allclose(np.asarray(s1)[0], np.asarray(s_b)[i], rtol=1e-5)
 
 
+@pytest.mark.parametrize("beam", [1, 4, 10])
+@pytest.mark.parametrize("qt", [4, 8])
+def test_grouped_bitwise_parity(small_tree, beam, qt):
+    """ISSUE 2 acceptance: the device-grouped MXU path is *bitwise* identical
+    to dense-lookup MSCM end-to-end — same labels, same score bits — across
+    beam widths and query-tile heights (ragged last tiles included)."""
+    tree, ws, x, xi, xv = small_tree
+    s0, l0 = tree.infer(xi, xv, beam=beam, topk=5, method="mscm_dense")
+    s1, l1 = tree.infer(xi, xv, beam=beam, topk=5,
+                        method="mscm_pallas_grouped", qt=qt)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l0))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s0))
+
+
+def test_grouped_bitwise_parity_logsum(small_tree):
+    tree, ws, x, xi, xv = small_tree
+    s0, l0 = tree.infer(xi, xv, beam=10, topk=5, method="mscm_dense",
+                        score_mode="logsum")
+    s1, l1 = tree.infer(xi, xv, beam=10, topk=5,
+                        method="mscm_pallas_grouped", score_mode="logsum")
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l0))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s0))
+
+
+def test_grouped_ragged_and_padded_chunks(rng):
+    """L not divisible by B (padded chunks) + beam not divisible by qt
+    (ragged last tile per chunk): grouped == dense bitwise, phantoms never
+    surface."""
+    from repro.sparse import random_sparse_csc
+
+    d, B = 80, 8
+    ws = [random_sparse_csc(d, 6, 8, rng), random_sparse_csc(d, 42, 8, rng)]
+    tree = XMRTree.from_weight_matrices(ws, [6, 8])
+    x = random_sparse_csr(20, d, 12, rng)
+    xi, xv = map(jnp.asarray, x.to_ell())
+    s0, l0 = tree.infer(xi, xv, beam=5, topk=7, method="mscm_dense")
+    s1, l1 = tree.infer(xi, xv, beam=5, topk=7,
+                        method="mscm_pallas_grouped", qt=4)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l0))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s0))
+    assert np.asarray(l1).max() < 42
+
+
+def test_grouped_fully_jitted(small_tree):
+    """The grouped method compiles as ONE XLA program: tracing succeeds (a
+    host-side grouping step would raise a TracerArrayConversionError), the
+    jaxpr contains no host callbacks, and repeated same-shape calls reuse
+    the compiled executable."""
+    import jax
+
+    from repro.core.tree import _tree_infer
+
+    tree, ws, x, xi, xv = small_tree
+
+    def run(a, b):
+        return _tree_infer(
+            tuple(tree.layers), tree.n_cols, tree.branching, tree.d, a, b,
+            beam=4, topk=3, method="mscm_pallas_grouped",
+            score_mode="prod", qt=4,
+        )
+
+    jaxpr = jax.make_jaxpr(run)(xi, xv)
+    assert "callback" not in str(jaxpr), "grouped path must not leave the jit"
+
+    if hasattr(_tree_infer, "_cache_size"):
+        run(xi, xv)
+        size_after_first = _tree_infer._cache_size()
+        run(xi, xv)  # same shapes/statics -> no recompile
+        assert _tree_infer._cache_size() == size_after_first
+
+
 def test_nonuniform_branching(rng):
     d = 90
     ws = make_tree_weights(rng, d, [4, 32], 8)  # level branchings 4 then 8
