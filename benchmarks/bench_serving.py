@@ -13,7 +13,16 @@ Three measurements on the CI-size tree:
 * ``microbatch-poisson``— open loop: Poisson arrivals at ~2x the baseline's
   capacity, reporting the Table-4 panel with queue-wait vs compute split.
 
-Run: ``python -m benchmarks.bench_serving [--n 128] [--max-batch 16]``
+``--overload`` runs the open-loop overload study instead: Poisson arrivals
+at 1×/2×/4× the measured closed-loop capacity against a *bounded* admission
+queue (shed-oldest), plus a 4× run against the unbounded queue and a 4× run
+with per-request deadlines. Reports goodput + P99 + shed/deadline-miss rates
+per rate, and a structural guarantees row (``p99_bounded`` — bounded 4× P99
+within 5× of the 1× run — and ``shed_nonzero``) that
+``benchmarks/check_regression.py`` gates hard.
+
+Run: ``python -m benchmarks.bench_serving [--n 128] [--max-batch 16]
+[--overload]``
 """
 
 from __future__ import annotations
@@ -27,10 +36,12 @@ import numpy as np
 from benchmarks.common import build_benchmark_tree, csv_line
 from repro.data.xmr_data import PAPER_SHAPES, benchmark_queries, scaled_shape
 from repro.serving import (
+    AdmissionPolicy,
     BatchPolicy,
     MicroBatcher,
     ServeConfig,
     ServerMetrics,
+    ServingError,
     XMRServingEngine,
 )
 
@@ -80,7 +91,10 @@ def run(
     )
 
     # -- closed-loop micro-batching ----------------------------------------
-    mb = MicroBatcher(engine, BatchPolicy(max_batch, max_wait_ms))
+    # Buckets were warmed in _build_engine; a second warmup inside the timed
+    # window would count real device batches against closed_wall.
+    mb = MicroBatcher(engine, BatchPolicy(max_batch, max_wait_ms),
+                      warmup_on_start=False)
     futs = mb.submit_csr(queries)  # all in flight before the worker starts
     t0 = time.perf_counter()
     mb.start()
@@ -107,18 +121,10 @@ def run(
 
     # -- open-loop Poisson arrivals at ~2x baseline capacity ----------------
     rate = 2.0 * base_qps
-    metrics = ServerMetrics()
-    mb = MicroBatcher(engine, BatchPolicy(max_batch, max_wait_ms), metrics)
-    mb.start()
-    arrivals = rng.exponential(1.0 / rate, size=n_queries)
-    futs = []
-    for i, gap in enumerate(arrivals):
-        time.sleep(gap)
-        futs.append(mb.submit(*queries.row(i)))
-    for f in futs:
-        f.result(timeout=120)
-    mb.stop()
-    s = metrics.summary()
+    s, _, _, _ = _open_loop(
+        engine, queries, BatchPolicy(max_batch, max_wait_ms),
+        AdmissionPolicy(None), rate, n_queries, rng,
+    )
     lines.append(
         csv_line(
             f"{shape.name}/serving/microbatch-poisson",
@@ -133,6 +139,164 @@ def run(
     return lines
 
 
+def _open_loop(
+    engine,
+    queries,
+    policy: BatchPolicy,
+    admission: AdmissionPolicy,
+    rate: float,
+    n: int,
+    rng: np.random.Generator,
+):
+    """Drive one open-loop Poisson run; returns (metrics summary, ok, failed,
+    goodput in completed-ok queries per second of wall time)."""
+    metrics = ServerMetrics()
+    mb = MicroBatcher(engine, policy, metrics, admission, warmup_on_start=False)
+    mb.start()
+    arrivals = rng.exponential(1.0 / rate, size=n)
+    t0 = time.perf_counter()
+    futs = []
+    t_next = t0
+    for i, gap in enumerate(arrivals):
+        # Open-loop pacing: sleep coarse, spin the last stretch — plain
+        # time.sleep's ~100us floor silently caps the offered rate well
+        # below the 4x-capacity target.
+        t_next += gap
+        lag = t_next - time.perf_counter()
+        if lag > 1e-3:
+            time.sleep(lag - 5e-4)
+        while time.perf_counter() < t_next:
+            pass
+        futs.append(mb.submit(*queries.row(i % queries.shape[0])))
+    ok = failed = 0
+    for f in futs:
+        try:
+            f.result(timeout=300)
+            ok += 1
+        except ServingError:
+            failed += 1
+    wall = time.perf_counter() - t0
+    mb.stop()
+    return metrics.summary(), ok, failed, ok / max(wall, 1e-9)
+
+
+def run_overload(
+    *,
+    n_queries: int = 256,
+    max_batch: int = 16,
+    max_wait_ms: float = 2.0,
+    max_labels: int = 4096,
+    seed: int = 0,
+    method: str = "auto",
+    rates=(1.0, 2.0, 4.0),
+    queue_depth: int | None = None,
+) -> List[str]:
+    """Open-loop overload study: bounded vs unbounded queues at 1×–4× capacity.
+
+    ``capacity`` is the *saturated* service ceiling — closed-loop QPS with
+    full coalescing. Under overload a backlogged open-loop server converges
+    to the same full-batch regime, so this is the honest anchor for the
+    multipliers; it also means the 1× run is already critical load (open
+    Poisson arrivals form smaller, less efficient batches than the closed
+    loop), so a shallow bounded queue sheds a little there too — expected
+    queueing behavior, not a calibration error.
+
+    The bounded server (queue depth ``2 * max_batch`` by default, shed-oldest)
+    must keep P99 e2e latency within 5× of its 1× run and shed a nonzero
+    fraction at 4× — both emitted as structural flags the regression gate
+    enforces. The unbounded 4× run demonstrates the failure mode this tier
+    exists to prevent (P99 grows with the backlog); the deadline 4× run shows
+    expired requests being dropped at dispatch instead of burning device time.
+    """
+    shape, engine, rng = _build_engine(max_labels, max_batch, seed, method)
+    queries = benchmark_queries(shape, n_queries, rng)
+    policy = BatchPolicy(max_batch, max_wait_ms)
+    queue_depth = queue_depth or 2 * max_batch
+    lines = []
+
+    # Capacity = closed-loop micro-batched QPS: the saturated full-batch
+    # ceiling an overloaded open-loop server converges to (see docstring).
+    mb = MicroBatcher(engine, policy, warmup_on_start=False)
+    futs = mb.submit_csr(queries)
+    t0 = time.perf_counter()
+    mb.start()
+    for f in futs:
+        f.result(timeout=300)
+    capacity = n_queries / (time.perf_counter() - t0)
+    mb.stop()
+
+    p99 = {}
+    shed_rate_at = {}
+    for mult in rates:
+        s, ok, failed, goodput = _open_loop(
+            engine, queries, policy,
+            AdmissionPolicy(queue_depth, "shed-oldest"),
+            mult * capacity, n_queries, rng,
+        )
+        p99[mult] = s.get("p99_ms", 0.0)
+        shed_rate_at[mult] = s.get("shed_rate", 0.0)
+        lines.append(
+            csv_line(
+                f"{shape.name}/serving/overload-bounded-{mult:g}x",
+                1e3 * p99[mult],  # p99 in us
+                f"goodput={goodput:.0f}qps p50={s.get('p50_ms', 0):.2f}ms "
+                f"p99={p99[mult]:.2f}ms shed_rate={s.get('shed_rate', 0):.3f} "
+                f"deadline_miss_rate={s.get('deadline_miss_rate', 0):.3f} "
+                f"ok={ok} shed={failed}",
+            )
+        )
+
+    top = max(rates)
+    # Unbounded queue at top rate: every request completes, P99 inherits the
+    # whole backlog — the failure mode admission control removes.
+    s, ok, failed, goodput = _open_loop(
+        engine, queries, policy, AdmissionPolicy(None),
+        top * capacity, n_queries, rng,
+    )
+    unb_p99 = s.get("p99_ms", 0.0)
+    lines.append(
+        csv_line(
+            f"{shape.name}/serving/overload-unbounded-{top:g}x",
+            1e3 * unb_p99,
+            f"goodput={goodput:.0f}qps p99={unb_p99:.2f}ms "
+            f"shed_rate={s.get('shed_rate', 0):.3f} ok={ok}",
+        )
+    )
+
+    # Deadline run at top rate: unbounded queue, per-request deadline equal
+    # to half the bounded queue's implied wait bound — expired requests are
+    # dropped at dispatch (deadline_miss_rate > 0) instead of holding device
+    # time, so goodput holds near capacity.
+    deadline_ms = 1e3 * queue_depth / (2.0 * capacity) + max_wait_ms
+    s, ok, failed, goodput = _open_loop(
+        engine, queries, policy,
+        AdmissionPolicy(None, deadline_ms=deadline_ms),
+        top * capacity, n_queries, rng,
+    )
+    lines.append(
+        csv_line(
+            f"{shape.name}/serving/overload-deadline-{top:g}x",
+            1e3 * s.get("p99_ms", 0.0),
+            f"goodput={goodput:.0f}qps deadline={deadline_ms:.1f}ms "
+            f"deadline_miss_rate={s.get('deadline_miss_rate', 0):.3f} ok={ok}",
+        )
+    )
+
+    lo = min(rates)
+    bounded_ok = p99[top] <= 5.0 * max(p99[lo], 1e-6)
+    shed_nonzero = shed_rate_at[top] > 0.0
+    lines.append(
+        csv_line(
+            f"{shape.name}/serving/overload-guarantees",
+            p99[top] / max(p99[lo], 1e-6),  # p99 degradation ratio, top vs lo
+            f"p99_bounded={bounded_ok} shed_nonzero={shed_nonzero} "
+            f"p99_{lo:g}x={p99[lo]:.2f}ms p99_{top:g}x={p99[top]:.2f}ms "
+            f"unbounded_p99={unb_p99:.2f}ms capacity={capacity:.0f}qps",
+        )
+    )
+    return lines
+
+
 def main(argv=None) -> List[str]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=128)
@@ -142,14 +306,31 @@ def main(argv=None) -> List[str]:
     ap.add_argument("--method", default="auto",
                     help='masked-matmul method ("auto" resolves per backend;'
                          ' e.g. mscm_pallas_grouped on TPU)')
+    ap.add_argument("--overload", action="store_true",
+                    help="open-loop overload study (bounded vs unbounded "
+                         "queue at 1x/2x/4x capacity) instead of the "
+                         "throughput panel")
+    ap.add_argument("--queue-depth", type=int, default=None,
+                    help="admission bound for --overload (default "
+                         "2 * max_batch)")
     args = ap.parse_args(argv)
-    lines = run(
-        n_queries=args.n,
-        max_batch=args.max_batch,
-        max_wait_ms=args.max_wait_ms,
-        max_labels=args.max_labels,
-        method=args.method,
-    )
+    if args.overload:
+        lines = run_overload(
+            n_queries=args.n,
+            max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms,
+            max_labels=args.max_labels,
+            method=args.method,
+            queue_depth=args.queue_depth,
+        )
+    else:
+        lines = run(
+            n_queries=args.n,
+            max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms,
+            max_labels=args.max_labels,
+            method=args.method,
+        )
     for line in lines:
         print(line)
     return lines

@@ -9,9 +9,11 @@ Rows are matched by name against ``benchmarks/BENCH_baseline.json`` (skipped
 gracefully when no baseline is committed). Timing rows (``us_per_call``) are
 compared as ratios; shared-runner drift makes hard timing gates flaky, so by
 default regressions are *reported* and only ``--strict`` turns them into a
-nonzero exit. Structural rows are always strict: a ``bitwise_identical=False``
-or ``amortizes=False`` flag in any derived field fails the check regardless
-of mode — those encode correctness/shape claims, not wall-clock.
+nonzero exit. Structural rows are always strict: a ``<flag>=False`` for any
+flag in ``STRUCT_FLAGS`` (bitwise identity, batch amortization, overload
+P99 boundedness, nonzero shed under 4x load) in any derived field fails the
+check regardless of mode — those encode correctness/behavioral claims, not
+wall-clock.
 """
 
 from __future__ import annotations
@@ -27,6 +29,17 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json"
 # Tile-count and share rows are deterministic counters, not timings; hold
 # them to an exact-ish tolerance instead of the timing ratio.
 COUNTER_MARKERS = ("_tiles", "_share_", "matmul_share")
+
+# Boolean claims in derived fields: "<flag>=False" anywhere fails the gate.
+STRUCT_FLAGS = ("bitwise_identical", "amortizes", "p99_bounded", "shed_nonzero")
+
+
+def _failed_flags(derived: str) -> List[str]:
+    return [f for f in STRUCT_FLAGS if f"{f}=False" in derived]
+
+
+def _has_flags(derived: str) -> bool:
+    return any(f"{f}=" in derived for f in STRUCT_FLAGS)
 
 
 def _rows_by_name(doc: dict) -> Dict[str, dict]:
@@ -47,7 +60,7 @@ def compare(
     failures: List[str] = []
     for name, row in sorted(cur.items()):
         derived = row.get("derived", "")
-        if "bitwise_identical=False" in derived or "amortizes=False" in derived:
+        if _failed_flags(derived):
             failures.append(f"{name}: structural flag failed ({derived})")
         b = base.get(name)
         if b is None or b.get("us_per_call", 0) <= 0:
@@ -69,8 +82,7 @@ def compare(
     for name in missing:
         line = f"{name:55s} (row disappeared from current run)"
         b_derived = base[name].get("derived", "")
-        if (_is_counter(name) or "bitwise_identical=" in b_derived
-                or "amortizes=" in b_derived):
+        if _is_counter(name) or _has_flags(b_derived):
             # Dropping a structural row must not quietly pass the gate —
             # that would erase exactly the coverage this check exists for.
             failures.append(

@@ -84,6 +84,10 @@ def main() -> None:
     emit(bench_parallel.run(max_labels=mscm_kw["max_labels"],
                             batches=(1, 4, 16, 64)))
     emit(bench_serving.run(n_queries=64 if not args.full else 256))
+    # Overload-safety smoke (ISSUE 3): bounded-queue admission control at
+    # 1x/2x/4x capacity — the p99_bounded / shed_nonzero structural flags
+    # in the guarantees row gate via check_regression.
+    emit(bench_serving.run_overload(n_queries=96 if not args.full else 256))
     emit(bench_xmr_head.run())
     if not args.skip_enterprise:
         emit(bench_enterprise.run(n_queries=16 if not args.full else 64))

@@ -126,6 +126,19 @@ class XMRTree:
             ncols.append(w.shape[1])
         return cls(layers=layers, n_cols=tuple(ncols), branching=tuple(bs), d=weights[0].shape[0])
 
+    def device_put(self, sharding) -> "XMRTree":
+        """Copy of the tree with every layer tensor placed per ``sharding``.
+
+        With a replicated ``NamedSharding(mesh, P())`` this is the serving
+        tier's multi-device path: one physical copy per device, after which
+        data-sharded query batches fan out over the mesh for free.
+        """
+        layers = [
+            jax.tree.map(lambda a: jax.device_put(a, sharding), l)
+            for l in self.layers
+        ]
+        return dataclasses.replace(self, layers=layers)
+
     def memory_bytes(self) -> int:
         tot = 0
         for l in self.layers:

@@ -28,6 +28,23 @@ def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
+def replica_mesh(n: int, *, devices: Sequence[Any] | None = None) -> Mesh:
+    """1-D ``("data",)`` mesh over the first ``n`` local devices.
+
+    The serving tier's data-parallel dispatch mesh: model tensors replicate
+    (``P()``), each micro-batch's batch dim splits over ``"data"`` so one
+    formed bucket occupies all ``n`` replicas. On CPU, multiple host devices
+    come from ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < n:
+        raise ValueError(
+            f"replica_mesh(n={n}): only {len(devices)} local devices "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count on CPU)"
+        )
+    return Mesh(np.asarray(devices[:n]), ("data",))
+
+
 def axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1

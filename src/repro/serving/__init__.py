@@ -1,14 +1,32 @@
-from repro.serving.batcher import BatchPolicy, MicroBatcher, RequestQueue
+from repro.serving.admission import (
+    AdmissionController,
+    AdmissionPolicy,
+    DeadlineExceeded,
+    Overloaded,
+    ServingError,
+)
+from repro.serving.batcher import (
+    BatchPolicy,
+    MicroBatcher,
+    RequestQueue,
+    StreamResult,
+)
 from repro.serving.engine import ServeConfig, XMRServingEngine, resolve_method
 from repro.serving.metrics import LatencyStats, ServerMetrics
 
 __all__ = [
+    "AdmissionController",
+    "AdmissionPolicy",
     "BatchPolicy",
+    "DeadlineExceeded",
     "LatencyStats",
     "MicroBatcher",
+    "Overloaded",
     "RequestQueue",
     "ServeConfig",
     "ServerMetrics",
+    "ServingError",
+    "StreamResult",
     "XMRServingEngine",
     "resolve_method",
 ]

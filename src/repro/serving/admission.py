@@ -1,0 +1,147 @@
+"""Admission control for the micro-batching server.
+
+Under sustained overload an unbounded request queue converts every incoming
+query into latency: the queue grows without bound, every request eventually
+completes, and P99 is whatever backlog happened to accumulate — the classic
+open-loop failure mode. Production XMR serving (the traffic regime of the
+paper's §6 enterprise deployment) instead *sheds* load at a bounded queue
+depth so the requests it does serve stay within their latency budget.
+
+This module provides the pieces the batcher wires in:
+
+* :class:`Overloaded` / :class:`DeadlineExceeded` — typed errors a shed or
+  expired request's future resolves with (clients can distinguish "retry
+  elsewhere" from a real failure).
+* :class:`AdmissionPolicy` — queue-depth bound, shed policy, and the default
+  per-request deadline.
+* :class:`AdmissionController` — applies the policy at enqueue time (under
+  the queue lock, so depth checks are race-free) and expires requests at
+  dispatch time so a query past its deadline never burns device time.
+
+Shed policies:
+
+``reject``
+    The *new* request is refused: its future resolves with
+    :class:`Overloaded` and the queue is untouched. Favors requests already
+    waiting (FIFO fairness under overload).
+``shed-oldest``
+    The oldest *queued* request is dropped and the new one admitted. Favors
+    freshness: under overload the oldest request is the most likely to blow
+    its deadline anyway, so shedding it wastes the least useful work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+SHED_REJECT = "reject"
+SHED_OLDEST = "shed-oldest"
+SHED_POLICIES = (SHED_REJECT, SHED_OLDEST)
+
+
+class ServingError(RuntimeError):
+    """Base class for typed serving-tier request failures."""
+
+
+class Overloaded(ServingError):
+    """Request shed by admission control (bounded queue was full)."""
+
+    def __init__(self, queue_depth: int, policy: str):
+        super().__init__(
+            f"request shed: queue depth bound {queue_depth} reached "
+            f"(policy={policy!r})"
+        )
+        self.queue_depth = queue_depth
+        self.policy = policy
+
+
+class DeadlineExceeded(ServingError):
+    """Request expired before dispatch; no device time was spent on it."""
+
+    def __init__(self, waited_ms: float, deadline_ms: float):
+        super().__init__(
+            f"request deadline exceeded before dispatch: waited "
+            f"{waited_ms:.2f} ms > {deadline_ms:.2f} ms budget"
+        )
+        self.waited_ms = waited_ms
+        self.deadline_ms = deadline_ms
+
+
+@dataclasses.dataclass
+class AdmissionPolicy:
+    """Overload policy for a :class:`~repro.serving.batcher.MicroBatcher`.
+
+    ``max_queue_depth=None`` disables the bound (the pre-admission-control
+    behavior); ``deadline_ms=None`` disables per-request deadlines.
+    """
+
+    max_queue_depth: Optional[int] = None
+    shed_policy: str = SHED_REJECT
+    deadline_ms: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if self.shed_policy not in SHED_POLICIES:
+            raise ValueError(
+                f"shed_policy={self.shed_policy!r}; choose from {SHED_POLICIES}"
+            )
+        if self.max_queue_depth is not None and self.max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1 (or None)")
+
+
+class AdmissionController:
+    """Applies an :class:`AdmissionPolicy` at the queue boundary.
+
+    ``admit`` runs under the request-queue lock (depth check and shed are
+    atomic with the append); ``expire`` runs on the worker thread at batch
+    dispatch. Both resolve futures with typed errors and record into
+    ``metrics`` — neither ever raises into the caller.
+    """
+
+    def __init__(self, policy: AdmissionPolicy, metrics) -> None:
+        self.policy = policy
+        self.metrics = metrics
+
+    def stamp_deadline(self, req) -> None:
+        """Attach the policy's default deadline to a request lacking one."""
+        if req.t_deadline is None and self.policy.deadline_ms is not None:
+            req.t_deadline = req.t_enqueue + 1e-3 * self.policy.deadline_ms
+
+    def admit(self, queue, req) -> bool:
+        """Decide admission for ``req`` against the live deque ``queue``.
+
+        Returns True if ``req`` should be appended. On shed, the victim's
+        future (the new request under ``reject``, the queue head under
+        ``shed-oldest``) resolves with :class:`Overloaded`.
+        """
+        depth = self.policy.max_queue_depth
+        if depth is None or len(queue) < depth:
+            return True
+        if self.policy.shed_policy == SHED_REJECT:
+            req.future.set_exception(Overloaded(depth, SHED_REJECT))
+            self.metrics.record_shed()
+            return False
+        victim = queue.popleft()
+        victim.future.set_exception(Overloaded(depth, SHED_OLDEST))
+        self.metrics.record_shed()
+        return True
+
+    def expire(self, reqs, now: Optional[float] = None):
+        """Split a formed batch into live requests, failing expired ones.
+
+        Called at dispatch time so an expired request never reaches the
+        device. Returns the surviving (still-live) requests in order.
+        """
+        if now is None:
+            now = time.perf_counter()
+        live = []
+        for r in reqs:
+            if r.t_deadline is not None and now >= r.t_deadline:
+                waited = 1e3 * (now - r.t_enqueue)
+                budget = 1e3 * (r.t_deadline - r.t_enqueue)
+                r.future.set_exception(DeadlineExceeded(waited, budget))
+                self.metrics.record_deadline_miss()
+            else:
+                live.append(r)
+        return live

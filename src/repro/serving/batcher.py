@@ -8,30 +8,39 @@ is amortized — the same economics as the paper's batch-parallelism study
 
 * :class:`RequestQueue` — thread-safe queue with the two classic coalescing
   triggers: **size** (``max_batch`` requests waiting) and **deadline** (the
-  oldest request has waited ``max_wait_ms``).
+  oldest request has waited ``max_wait_ms``), gated by an optional
+  :class:`~repro.serving.admission.AdmissionController` so queue depth stays
+  bounded under overload.
 * :class:`MicroBatcher` — a worker thread that drains the queue, marshals
   each micro-batch through the vectorized CSR→ELL path into the engine's
   power-of-two jit buckets, and resolves per-request futures. Dispatch is
   double-buffered: because JAX dispatch is asynchronous, batch *i+1* is
-  marshalled on the host while the device executes batch *i*.
+  marshalled on the host while the device executes batch *i* — and a batch
+  whose trigger fires while batch *i* is still on the device is dispatched
+  *before* the worker blocks on batch *i*'s results.
 
 Results are bitwise-identical to per-query serving: bucket padding rows are
 empty sentinel queries and the padded tail is sliced off before futures
-resolve (pinned by tests/test_serving.py).
+resolve (pinned by tests/test_serving.py). Overload semantics (bounded
+queue, shed policies, per-request deadlines) live in
+:mod:`repro.serving.admission`; requests shed or expired resolve their
+futures with typed errors and never reach the device.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
 import threading
 import time
 from collections import deque
 from concurrent.futures import Future
-from typing import List, Optional, Tuple
+from typing import Iterable, Iterator, List, Optional, Tuple, Union
 
 import jax
 import numpy as np
 
+from repro.serving.admission import AdmissionController, AdmissionPolicy
 from repro.serving.engine import XMRServingEngine
 from repro.serving.metrics import ServerMetrics
 from repro.sparse.csr import CSR
@@ -39,6 +48,10 @@ from repro.sparse.csr import CSR
 TRIGGER_SIZE = "size"
 TRIGGER_DEADLINE = "deadline"
 TRIGGER_FLUSH = "flush"
+
+# Spin interval while waiting for either a coalescing trigger or the
+# in-flight batch's device results, whichever comes first.
+_POLL_S = 5e-5
 
 
 @dataclasses.dataclass
@@ -55,15 +68,22 @@ class _Request:
     val: np.ndarray           # float32 values
     future: Future
     t_enqueue: float
+    t_deadline: Optional[float] = None  # absolute perf_counter deadline
 
 
 class RequestQueue:
-    """Thread-safe request queue with size/deadline batch formation."""
+    """Thread-safe request queue with size/deadline batch formation.
 
-    def __init__(self) -> None:
+    With an :class:`AdmissionController`, ``put`` applies the shed policy
+    under the queue lock (depth check atomic with the append); a shed
+    request's future resolves with ``Overloaded`` instead of enqueueing.
+    """
+
+    def __init__(self, admission: AdmissionController | None = None) -> None:
         self._q: deque[_Request] = deque()
         self._cond = threading.Condition()
         self._closed = False
+        self._admission = admission
 
     def __len__(self) -> int:
         with self._cond:
@@ -78,6 +98,10 @@ class RequestQueue:
         with self._cond:
             if self._closed:
                 raise RuntimeError("RequestQueue is closed")
+            if self._admission is not None and not self._admission.admit(
+                self._q, req
+            ):
+                return  # shed: future already holds Overloaded
             self._q.append(req)
             self._cond.notify_all()
 
@@ -135,6 +159,37 @@ class _InFlight:
     trigger: str
 
 
+def _device_ready(inflight: _InFlight) -> bool:
+    """True when the in-flight batch's device results are ready.
+
+    Falls back to True (immediate, blocking finalize — the old behavior)
+    on jax versions whose arrays lack ``is_ready``.
+    """
+    try:
+        return bool(inflight.scores.is_ready() and inflight.labels.is_ready())
+    except AttributeError:
+        return True
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """One completed request from :meth:`MicroBatcher.stream`.
+
+    ``error`` holds the typed exception for shed/expired/failed requests
+    (``scores``/``labels`` are then None) so overload does not kill the
+    generator mid-stream.
+    """
+
+    index: int
+    scores: Optional[np.ndarray]
+    labels: Optional[np.ndarray]
+    error: Optional[BaseException] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
 class MicroBatcher:
     """Coalescing async server over an :class:`XMRServingEngine`.
 
@@ -143,6 +198,11 @@ class MicroBatcher:
         with MicroBatcher(engine, BatchPolicy(max_batch=16)) as mb:
             futs = [mb.submit(idx, val) for idx, val in requests]
             results = [f.result() for f in futs]   # (scores, labels) each
+
+    Overload policy comes from ``admission`` (or, by default, the engine's
+    ``ServeConfig`` queue-depth/shed/deadline knobs); ``start()`` warms every
+    jit bucket the policy can form so the first live batch never pays an XLA
+    compile inside its latency budget (``warmup_on_start=False`` opts out).
     """
 
     def __init__(
@@ -150,6 +210,9 @@ class MicroBatcher:
         engine: XMRServingEngine,
         policy: BatchPolicy | None = None,
         metrics: ServerMetrics | None = None,
+        admission: AdmissionPolicy | None = None,
+        *,
+        warmup_on_start: bool = True,
     ) -> None:
         self.engine = engine
         self.policy = policy or BatchPolicy()
@@ -159,7 +222,14 @@ class MicroBatcher:
                 f"max_batch={engine.config.max_batch}"
             )
         self.metrics = metrics or ServerMetrics()
-        self.queue = RequestQueue()
+        self.admission = admission or AdmissionPolicy(
+            max_queue_depth=engine.config.queue_depth,
+            shed_policy=engine.config.shed_policy,
+            deadline_ms=engine.config.deadline_ms,
+        )
+        self._controller = AdmissionController(self.admission, self.metrics)
+        self.queue = RequestQueue(self._controller)
+        self.warmup_on_start = warmup_on_start
         self._thread: threading.Thread | None = None
 
     # -- lifecycle ----------------------------------------------------------
@@ -168,6 +238,8 @@ class MicroBatcher:
             raise RuntimeError("MicroBatcher already started")
         if self.queue.closed:
             raise RuntimeError("MicroBatcher cannot be restarted after stop()")
+        if self.warmup_on_start:
+            self.engine.warmup_buckets(self.engine.tree.d, self.policy.max_batch)
         self._thread = threading.Thread(
             target=self._worker, name="xmr-microbatcher", daemon=True
         )
@@ -188,21 +260,68 @@ class MicroBatcher:
         self.stop()
 
     # -- client API ---------------------------------------------------------
-    def submit(self, idx: np.ndarray, val: np.ndarray) -> Future:
-        """Enqueue one sparse query; resolves to (scores [k], labels [k])."""
-        fut: Future = Future()
-        self.queue.put(
-            _Request(
-                idx=np.asarray(idx, np.int32),
-                val=np.asarray(val, np.float32),
-                future=fut,
-                t_enqueue=time.perf_counter(),
-            )
+    def submit(
+        self,
+        idx: np.ndarray,
+        val: np.ndarray,
+        *,
+        deadline_ms: Optional[float] = None,
+    ) -> Future:
+        """Enqueue one sparse query; resolves to (scores [k], labels [k]).
+
+        Always returns a Future — a request shed by admission control comes
+        back with :class:`~repro.serving.admission.Overloaded` already set.
+        ``deadline_ms`` overrides the policy's default per-request deadline.
+        """
+        self.metrics.record_offered()
+        t_enqueue = time.perf_counter()
+        req = _Request(
+            idx=np.asarray(idx, np.int32),
+            val=np.asarray(val, np.float32),
+            future=Future(),
+            t_enqueue=t_enqueue,
+            t_deadline=(
+                t_enqueue + 1e-3 * deadline_ms if deadline_ms is not None else None
+            ),
         )
-        return fut
+        self._controller.stamp_deadline(req)
+        self.queue.put(req)
+        return req.future
 
     def submit_csr(self, queries: CSR) -> List[Future]:
         return [self.submit(*queries.row(i)) for i in range(queries.shape[0])]
+
+    def stream(
+        self,
+        queries: Union[CSR, Iterable[Tuple[np.ndarray, np.ndarray]]],
+        *,
+        deadline_ms: Optional[float] = None,
+    ) -> Iterator[StreamResult]:
+        """Submit all queries, yield :class:`StreamResult` in completion order.
+
+        Completion order is whatever the coalescing worker produces — early
+        batches stream back while later queries are still queued, and shed /
+        expired requests surface immediately as error results instead of
+        blocking the stream behind slower successes.
+        """
+        if isinstance(queries, CSR):
+            pairs = (queries.row(i) for i in range(queries.shape[0]))
+        else:
+            pairs = iter(queries)
+        done: queue_mod.Queue = queue_mod.Queue()
+        n = 0
+        for i, (idx, val) in enumerate(pairs):
+            fut = self.submit(idx, val, deadline_ms=deadline_ms)
+            fut.add_done_callback(lambda f, i=i: done.put((i, f)))
+            n += 1
+        for _ in range(n):
+            i, fut = done.get()
+            exc = fut.exception()
+            if exc is not None:
+                yield StreamResult(i, None, None, exc)
+            else:
+                s, l = fut.result()
+                yield StreamResult(i, s, l)
 
     # -- worker -------------------------------------------------------------
     def _dispatch(self, reqs: List[_Request], trigger: str) -> _InFlight:
@@ -215,6 +334,24 @@ class MicroBatcher:
         xi, xv = self.engine.marshal_rows(sub, np.arange(len(reqs)), bucket)
         s, l = self.engine._run(xi, xv)  # async dispatch — do not block here
         return _InFlight(reqs, s, l, t_dequeue, bucket, trigger)
+
+    def _try_dispatch(
+        self, reqs: List[_Request], trigger: str
+    ) -> Optional[_InFlight]:
+        """Expire dead requests, dispatch the survivors, fail on error.
+
+        Deadline checks happen here — at dispatch, not enqueue — so an
+        expired request never burns device time, and returns None when the
+        whole batch expired (nothing to dispatch).
+        """
+        live = self._controller.expire(reqs)
+        if not live:
+            return None
+        try:
+            return self._dispatch(live, trigger)
+        except BaseException as exc:  # noqa: BLE001 — fail the batch, keep serving
+            self._fail(live, exc)
+            return None
 
     def _finalize(self, inflight: _InFlight) -> None:
         jax.block_until_ready((inflight.scores, inflight.labels))
@@ -229,12 +366,35 @@ class MicroBatcher:
             t_done=t_done,
             bucket=inflight.bucket,
             trigger=inflight.trigger,
+            shards=self.engine.config.shards,
         )
 
     def _fail(self, reqs: List[_Request], exc: BaseException) -> None:
         for r in reqs:
             if not r.future.done():
                 r.future.set_exception(exc)
+
+    def _poll_ready(
+        self, pending: _InFlight, wait_s: float
+    ) -> Tuple[Optional[List[_Request]], str]:
+        """Wait for a trigger OR the in-flight results, whichever first.
+
+        Returns a formed batch (trigger fired / closed-flush) the moment it
+        is ready so it can be dispatched *before* the worker blocks on
+        ``pending`` — otherwise a deadline-triggered batch would wait a full
+        extra device-batch time behind ``_finalize``. Returns ``([], "")``
+        once ``pending``'s device results are ready with no trigger fired.
+        """
+        p = self.policy
+        while True:
+            reqs, trigger = self.queue.next_batch(
+                p.max_batch, wait_s, block=False
+            )
+            if reqs is None or reqs:
+                return reqs, trigger
+            if _device_ready(pending):
+                return [], ""
+            time.sleep(_POLL_S)
 
     def _worker(self) -> None:
         p = self.policy
@@ -245,20 +405,12 @@ class MicroBatcher:
                 reqs, trigger = self.queue.next_batch(p.max_batch, wait_s)
                 if reqs is None:
                     break
-                try:
-                    pending = self._dispatch(reqs, trigger)
-                except BaseException as exc:  # noqa: BLE001 — fail the batch, keep serving
-                    self._fail(reqs, exc)
+                pending = self._try_dispatch(reqs, trigger)
             else:
-                reqs, trigger = self.queue.next_batch(
-                    p.max_batch, wait_s, block=False
-                )
-                nxt = None
-                if reqs:
-                    try:
-                        nxt = self._dispatch(reqs, trigger)
-                    except BaseException as exc:  # noqa: BLE001
-                        self._fail(reqs, exc)
+                reqs, trigger = self._poll_ready(pending, wait_s)
+                # Double-buffer: the ready batch goes on the device first;
+                # only then block on the previous batch's results.
+                nxt = self._try_dispatch(reqs, trigger) if reqs else None
                 try:
                     self._finalize(pending)
                 except BaseException as exc:  # noqa: BLE001

@@ -1,11 +1,17 @@
 """Serving-side metrics.
 
 :class:`LatencyStats` is the per-query wall-clock recorder the paper's
-Table 4 reports (avg / P50 / P95 / P99). :class:`ServerMetrics` extends it
-for the async micro-batching engine: each request is decomposed into
-queue-wait (enqueue → batch formed) and compute (batch dispatch → results
-ready), plus whole-run throughput (QPS) and per-batch coalescing
-diagnostics (size vs deadline trigger, bucket occupancy).
+Table 4 reports (avg / P50 / P95 / P99). Per-query samples and amortized
+batch-call averages are kept in *separate* series: percentiles over call
+averages are not per-query percentiles, and conflating them (as an early
+version of ``serve_batch`` did) silently mislabels the Table-4 panel.
+
+:class:`ServerMetrics` extends it for the async micro-batching engine: each
+request decomposes into queue-wait (enqueue → batch formed) and compute
+(batch dispatch → results ready), plus whole-run throughput (QPS/goodput),
+coalescing diagnostics (size vs deadline trigger, bucket occupancy),
+overload accounting (shed rate, deadline-miss rate), and — when dispatch is
+sharded over a device mesh — per-replica occupancy.
 """
 
 from __future__ import annotations
@@ -28,16 +34,58 @@ def _percentiles(arr: np.ndarray) -> Dict[str, float]:
 
 @dataclasses.dataclass
 class LatencyStats:
-    per_query_ms: List[float] = dataclasses.field(default_factory=list)
+    """Latency recorder with per-query and amortized series kept distinct.
 
-    def record(self, total_s: float, n_queries: int) -> None:
-        self.per_query_ms.append(1e3 * total_s / max(n_queries, 1))
+    ``record`` takes one true per-query wall-clock sample (the online
+    setting); ``record_amortized`` takes a whole batch call's wall time and
+    query count (the batch setting, where overlapped chunks make individual
+    per-query times meaningless). ``summary()`` reports percentiles only
+    over the per-query series; amortized data appears under its own key.
+    """
+
+    per_query_ms: List[float] = dataclasses.field(default_factory=list)
+    amortized_ms: List[float] = dataclasses.field(default_factory=list)
+    amortized_queries: int = 0
+
+    def record(self, query_s: float, n_queries: int = 1) -> None:
+        """Record per-query latency samples.
+
+        ``n_queries > 1`` is an amortized call average, not a per-query
+        sample — routed to the amortized series so ``summary()``'s p95/p99
+        stay honest percentiles over individual query latencies.
+        """
+        if n_queries > 1:
+            self.record_amortized(query_s, n_queries)
+        else:
+            self.per_query_ms.append(1e3 * query_s)
+
+    def record_amortized(self, total_s: float, n_queries: int) -> None:
+        """Record one batch call: total wall time over ``n_queries``."""
+        self.amortized_ms.append(1e3 * total_s / max(n_queries, 1))
+        self.amortized_queries += n_queries
 
     def summary(self) -> dict:
-        if not self.per_query_ms:
-            return {"count": 0}
-        arr = np.asarray(self.per_query_ms)
-        return {"count": len(arr), **_percentiles(arr)}
+        out: dict = {"count": len(self.per_query_ms)}
+        if self.per_query_ms:
+            out.update(_percentiles(np.asarray(self.per_query_ms)))
+        if self.amortized_ms:
+            arr = np.asarray(self.amortized_ms)
+            out["amortized"] = {
+                "calls": len(arr),
+                "queries": self.amortized_queries,
+                "avg_ms_per_query": float(arr.mean()),
+            }
+        return out
+
+
+def _replica_rows(count: int, bucket: int, shards: int) -> List[int]:
+    """Real (non-padding) rows each replica holds for one dispatched bucket.
+
+    The bucket splits evenly over the mesh's data axis; real rows occupy the
+    bucket head, so padding concentrates on the trailing replicas.
+    """
+    per = bucket // max(shards, 1)
+    return [int(np.clip(count - r * per, 0, per)) for r in range(shards)]
 
 
 @dataclasses.dataclass
@@ -45,7 +93,7 @@ class ServerMetrics:
     """End-to-end request accounting for the micro-batching server.
 
     Thread-safe: the batcher worker records batches while client threads
-    read summaries.
+    submit (shed/deadline counters) and read summaries.
     """
 
     queue_wait_ms: List[float] = dataclasses.field(default_factory=list)
@@ -54,12 +102,30 @@ class ServerMetrics:
     batch_sizes: List[int] = dataclasses.field(default_factory=list)
     bucket_sizes: List[int] = dataclasses.field(default_factory=list)
     triggers: List[str] = dataclasses.field(default_factory=list)
+    batch_shards: List[int] = dataclasses.field(default_factory=list)
+    offered: int = 0
+    shed: int = 0
+    deadline_missed: int = 0
     _t_first: float | None = None
     _t_last: float | None = None
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False
     )
 
+    # -- overload accounting (client/worker threads) ------------------------
+    def record_offered(self) -> None:
+        with self._lock:
+            self.offered += 1
+
+    def record_shed(self) -> None:
+        with self._lock:
+            self.shed += 1
+
+    def record_deadline_miss(self) -> None:
+        with self._lock:
+            self.deadline_missed += 1
+
+    # -- batch accounting (worker thread) -----------------------------------
     def record_batch(
         self,
         *,
@@ -68,6 +134,7 @@ class ServerMetrics:
         t_done: float,
         bucket: int,
         trigger: str,
+        shards: int = 1,
     ) -> None:
         """Record one dispatched micro-batch of len(t_enqueue) requests."""
         compute = 1e3 * (t_done - t_dequeue)
@@ -79,6 +146,7 @@ class ServerMetrics:
             self.batch_sizes.append(len(t_enqueue))
             self.bucket_sizes.append(bucket)
             self.triggers.append(trigger)
+            self.batch_shards.append(shards)
             first = min(t_enqueue)
             if self._t_first is None or first < self._t_first:
                 self._t_first = first
@@ -93,7 +161,14 @@ class ServerMetrics:
     def summary(self) -> dict:
         with self._lock:
             if not self.e2e_ms:
-                return {"count": 0}
+                out = {"count": 0}
+                if self.offered:
+                    out["offered"] = self.offered
+                    out["shed"] = self.shed
+                    out["shed_rate"] = self.shed / self.offered
+                    out["deadline_missed"] = self.deadline_missed
+                    out["deadline_miss_rate"] = self.deadline_missed / self.offered
+                return out
             e2e = np.asarray(self.e2e_ms)
             wait = np.asarray(self.queue_wait_ms)
             comp = np.asarray(self.compute_ms)
@@ -102,7 +177,7 @@ class ServerMetrics:
             trig = {
                 t: self.triggers.count(t) for t in sorted(set(self.triggers))
             }
-            return {
+            out = {
                 "count": len(e2e),
                 **_percentiles(e2e),
                 "queue_wait_avg_ms": float(wait.mean()),
@@ -110,11 +185,32 @@ class ServerMetrics:
                 "compute_per_query_avg_ms": float(
                     comp.sum() / max(sizes.sum(), 1)
                 ),
+                # e2e_ms only holds completed requests, so qps IS goodput
                 "qps": float(len(e2e) / wall_s),
                 "batches": len(sizes),
                 "avg_batch": float(sizes.mean()),
                 "triggers": trig,
             }
+            offered = max(self.offered, len(e2e))
+            out["offered"] = offered
+            out["shed"] = self.shed
+            out["shed_rate"] = self.shed / offered
+            out["deadline_missed"] = self.deadline_missed
+            out["deadline_miss_rate"] = self.deadline_missed / offered
+            max_shards = max(self.batch_shards, default=1)
+            if max_shards > 1:
+                occ = np.zeros(max_shards)
+                for count, bucket, shards in zip(
+                    self.batch_sizes, self.bucket_sizes, self.batch_shards
+                ):
+                    rows = _replica_rows(count, bucket, shards)
+                    per = bucket // shards
+                    for r in range(max_shards):
+                        occ[r] += (rows[r] / per) if r < shards else 0.0
+                out["replica_occupancy"] = [
+                    round(float(o / len(self.batch_sizes)), 4) for o in occ
+                ]
+            return out
 
     def table4_row(self, name: str) -> str:
         """One line in the paper's Table-4 latency panel format."""
@@ -127,5 +223,7 @@ class ServerMetrics:
             f"p99 {s['p99_ms']:7.3f}   "
             f"wait {s['queue_wait_avg_ms']:6.3f}   "
             f"compute {s['compute_per_query_avg_ms']:6.3f}   "
-            f"{s['qps']:8.1f} QPS"
+            f"{s['qps']:8.1f} QPS   "
+            f"shed {100 * s['shed_rate']:5.1f}%   "
+            f"miss {100 * s['deadline_miss_rate']:5.1f}%"
         )

@@ -1,0 +1,228 @@
+"""Overload-safe serving: admission control, deadlines, streaming.
+
+Pins the serving tier's overload contract:
+1. bounded queue depth with ``reject`` / ``shed-oldest`` policies, shed
+   futures resolving with the typed ``Overloaded`` error;
+2. per-request deadlines checked at *dispatch* — an expired request never
+   reaches the device;
+3. the streaming client API yields every submitted query exactly once, in
+   completion order, surfacing shed/expired requests as error results;
+4. overload accounting (offered / shed / deadline-miss) in ServerMetrics.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import XMRTree
+from repro.serving import (
+    AdmissionPolicy,
+    BatchPolicy,
+    DeadlineExceeded,
+    MicroBatcher,
+    Overloaded,
+    ServeConfig,
+    ServingError,
+    XMRServingEngine,
+)
+from repro.sparse import random_sparse_csr
+from tests.conftest import make_tree_weights
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(11)
+    d, B = 200, 8
+    ws = make_tree_weights(rng, d, [8, 64, 512], B)
+    tree = XMRTree.from_weight_matrices(ws, B)
+    engine = XMRServingEngine(tree, ServeConfig(ell_width=32, max_batch=64))
+    engine.warmup_buckets(d, 16)
+    queries = random_sparse_csr(40, d, 15, rng)
+    ref_s, ref_l = engine.serve_online(queries)
+    return engine, queries, ref_s, ref_l
+
+
+def _idle_batcher(engine, admission):
+    """A batcher whose worker is NOT started — the queue only fills."""
+    return MicroBatcher(
+        engine, BatchPolicy(max_batch=16, max_wait_ms=5.0),
+        admission=admission, warmup_on_start=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1. bounded queue + shed policies
+# ---------------------------------------------------------------------------
+
+def test_reject_policy_sheds_new_request(setup):
+    engine, queries, *_ = setup
+    mb = _idle_batcher(engine, AdmissionPolicy(max_queue_depth=2))
+    futs = [mb.submit(*queries.row(i)) for i in range(4)]
+    assert not futs[0].done() and not futs[1].done()  # admitted, waiting
+    for f in futs[2:]:
+        assert isinstance(f.exception(timeout=1), Overloaded)
+    assert len(mb.queue) == 2  # queue untouched by the rejected requests
+    s = mb.metrics.summary()
+    assert s["offered"] == 4 and s["shed"] == 2
+    assert s["shed_rate"] == pytest.approx(0.5)
+    mb.queue.close()
+
+
+def test_shed_oldest_policy_favors_freshness(setup):
+    engine, queries, *_ = setup
+    mb = _idle_batcher(
+        engine, AdmissionPolicy(max_queue_depth=2, shed_policy="shed-oldest")
+    )
+    futs = [mb.submit(*queries.row(i)) for i in range(4)]
+    # the two OLDEST were shed; the two newest are still queued
+    for f in futs[:2]:
+        exc = f.exception(timeout=1)
+        assert isinstance(exc, Overloaded)
+        assert exc.policy == "shed-oldest" and exc.queue_depth == 2
+        assert isinstance(exc, ServingError)  # typed hierarchy
+    assert not futs[2].done() and not futs[3].done()
+    assert len(mb.queue) == 2
+    mb.queue.close()
+
+
+def test_admission_policy_validation():
+    with pytest.raises(ValueError):
+        AdmissionPolicy(shed_policy="drop-random")
+    with pytest.raises(ValueError):
+        AdmissionPolicy(max_queue_depth=0)
+
+
+def test_admission_defaults_from_serve_config(setup):
+    engine, *_ = setup
+    cfg = ServeConfig(
+        ell_width=32, max_batch=64,
+        queue_depth=7, shed_policy="shed-oldest", deadline_ms=50.0,
+    )
+    eng = XMRServingEngine(engine.tree, cfg)
+    mb = MicroBatcher(eng, warmup_on_start=False)
+    assert mb.admission.max_queue_depth == 7
+    assert mb.admission.shed_policy == "shed-oldest"
+    assert mb.admission.deadline_ms == 50.0
+
+
+def test_shed_requests_complete_under_sustained_overload(setup):
+    """Flood a live bounded server: every future resolves, admitted results
+    are bitwise-correct, and a nonzero fraction is shed."""
+    engine, queries, ref_s, ref_l = setup
+    real_run = engine._run
+
+    def slow_run(xi, xv):
+        time.sleep(0.02)  # stretch device time so the queue must fill
+        return real_run(xi, xv)
+
+    engine._run = slow_run
+    try:
+        mb = MicroBatcher(
+            engine, BatchPolicy(max_batch=8, max_wait_ms=1.0),
+            admission=AdmissionPolicy(max_queue_depth=8,
+                                      shed_policy="shed-oldest"),
+            warmup_on_start=False,
+        ).start()
+        futs = [mb.submit(*queries.row(i % queries.shape[0]))
+                for i in range(120)]
+        ok = shed = 0
+        for i, f in enumerate(futs):
+            try:
+                s, l = f.result(timeout=60)
+                np.testing.assert_array_equal(s, ref_s[i % queries.shape[0]])
+                np.testing.assert_array_equal(l, ref_l[i % queries.shape[0]])
+                ok += 1
+            except Overloaded:
+                shed += 1
+        mb.stop()
+    finally:
+        engine._run = real_run
+    assert ok + shed == 120
+    assert shed > 0 and ok > 0
+    s = mb.metrics.summary()
+    assert s["shed"] == shed and s["offered"] == 120
+    assert s["shed_rate"] == pytest.approx(shed / 120)
+
+
+# ---------------------------------------------------------------------------
+# 2. per-request deadlines, enforced at dispatch
+# ---------------------------------------------------------------------------
+
+def test_expired_request_never_reaches_device(setup):
+    engine, queries, *_ = setup
+    eng = XMRServingEngine(engine.tree, ServeConfig(ell_width=32, max_batch=64))
+    calls = {"n": 0}
+    real_run = eng._run
+
+    def counting_run(xi, xv):
+        calls["n"] += 1
+        return real_run(xi, xv)
+
+    eng._run = counting_run
+    mb = MicroBatcher(eng, BatchPolicy(max_batch=16, max_wait_ms=1.0),
+                      warmup_on_start=False).start()
+    fut = mb.submit(*queries.row(0), deadline_ms=0.0)  # born expired
+    exc = fut.exception(timeout=10)
+    mb.stop()
+    assert isinstance(exc, DeadlineExceeded)
+    assert exc.deadline_ms == pytest.approx(0.0)
+    assert calls["n"] == 0  # no device time burned on the dead request
+    assert mb.metrics.summary()["deadline_missed"] == 1
+
+
+def test_live_requests_survive_expired_batchmates(setup):
+    engine, queries, ref_s, ref_l = setup
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=16, max_wait_ms=2.0),
+                      warmup_on_start=False).start()
+    dead = mb.submit(*queries.row(0), deadline_ms=0.0)
+    live = mb.submit(*queries.row(1))
+    s, l = live.result(timeout=30)
+    mb.stop()
+    assert isinstance(dead.exception(), DeadlineExceeded)
+    np.testing.assert_array_equal(s, ref_s[1])
+    np.testing.assert_array_equal(l, ref_l[1])
+
+
+# ---------------------------------------------------------------------------
+# 3. streaming client API
+# ---------------------------------------------------------------------------
+
+def test_stream_yields_all_results_in_completion_order(setup):
+    engine, queries, ref_s, ref_l = setup
+    with MicroBatcher(engine, BatchPolicy(max_batch=16, max_wait_ms=2.0),
+                      warmup_on_start=False) as mb:
+        results = list(mb.stream(queries))
+    assert len(results) == queries.shape[0]
+    assert sorted(r.index for r in results) == list(range(queries.shape[0]))
+    for r in results:
+        assert r.ok and r.error is None
+        np.testing.assert_array_equal(r.scores, ref_s[r.index])
+        np.testing.assert_array_equal(r.labels, ref_l[r.index])
+
+
+def test_stream_surfaces_shed_as_error_results(setup):
+    engine, queries, *_ = setup
+    real_run = engine._run
+
+    def slow_run(xi, xv):
+        time.sleep(0.02)
+        return real_run(xi, xv)
+
+    engine._run = slow_run
+    try:
+        with MicroBatcher(
+            engine, BatchPolicy(max_batch=8, max_wait_ms=1.0),
+            admission=AdmissionPolicy(max_queue_depth=4),
+            warmup_on_start=False,
+        ) as mb:
+            results = list(mb.stream(queries))
+    finally:
+        engine._run = real_run
+    assert sorted(r.index for r in results) == list(range(queries.shape[0]))
+    errs = [r for r in results if not r.ok]
+    oks = [r for r in results if r.ok]
+    assert errs and oks  # overload split the stream, but nothing vanished
+    for r in errs:
+        assert isinstance(r.error, Overloaded)
+        assert r.scores is None and r.labels is None

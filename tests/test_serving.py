@@ -1,11 +1,19 @@
 """Serving subsystem: vectorized marshalling, coalescing triggers, padding.
 
-Pins the three properties the async engine must not break:
-1. the vectorized CSR→ELL path equals the per-row loop oracle;
+Pins the properties the async engine must not break:
+1. the vectorized CSR→ELL path equals the per-row loop oracle (including a
+   truncation-parity property sweep for width < nnz);
 2. the RequestQueue fires on exactly the documented triggers
    (size / deadline / close-flush);
 3. bucket padding is invisible — micro-batched results are bitwise-identical
-   to per-query serving.
+   to per-query serving;
+4. MicroBatcher.start() pre-warms every jit bucket (no compile in the
+   serving path) and a ready batch dispatches before the worker blocks on
+   the in-flight one;
+5. a dispatch fault fails only its own batch — every future resolves
+   exactly once and the queue keeps serving;
+6. latency accounting stays honest: amortized batch averages never enter
+   the per-query percentile series.
 """
 
 import time
@@ -14,6 +22,7 @@ import numpy as np
 import pytest
 
 from repro.core import XMRTree
+from repro.core.tree import _tree_infer
 from repro.serving import (
     BatchPolicy,
     MicroBatcher,
@@ -25,6 +34,7 @@ from repro.serving.batcher import (
     TRIGGER_FLUSH,
     TRIGGER_SIZE,
     RequestQueue,
+    _InFlight,
     _Request,
 )
 from repro.sparse import (
@@ -33,6 +43,12 @@ from repro.sparse import (
     rows_to_ell_loop,
 )
 from tests.conftest import make_tree_weights
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +95,35 @@ def test_rows_to_ell_empty_rows(rng):
     x = CSR.from_dense(np.zeros((3, 10), np.float32))
     idx, val = rows_to_ell(x, np.arange(3), 4)
     assert (idx == 10).all() and (val == 0).all()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(
+        n=st.integers(1, 24),
+        d=st.integers(4, 300),
+        nnz=st.integers(1, 40),
+        width=st.integers(1, 12),
+        seed=st.integers(0, 2**16),
+    )
+    def test_rows_to_ell_truncation_parity_property(n, d, nnz, width, seed):
+        """Vectorized truncation (width < nnz) matches the per-row loop
+        oracle for arbitrary shapes, widths, and row selections."""
+        rng = np.random.default_rng(seed)
+        x = random_sparse_csr(n, d, min(nnz, d), rng)
+        sel = rng.integers(0, n, size=rng.integers(0, 2 * n))  # dups, any order
+        vi, vv = rows_to_ell(x, sel, width)
+        li, lv = rows_to_ell_loop(x, sel, width)
+        np.testing.assert_array_equal(vi, li)
+        np.testing.assert_array_equal(vv, lv)
+        # truncation semantics: never wider than width, sentinel-padded tails
+        assert vi.shape == (len(sel), width)
+        tail_mask = vi == d
+        assert (vv[tail_mask] == 0).all()
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -e .[dev])")
+    def test_rows_to_ell_truncation_parity_property():
+        pass
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +258,130 @@ def test_label_perm_applied_through_batcher(serving_setup):
     with MicroBatcher(eng2, BatchPolicy(max_batch=16, max_wait_ms=5.0)) as mb:
         res = [f.result(timeout=60) for f in mb.submit_csr(queries)]
     np.testing.assert_array_equal(np.stack([r[1] for r in res]), perm[ref_l])
+
+
+# ---------------------------------------------------------------------------
+# 4. start() warmup + dispatch-before-finalize
+# ---------------------------------------------------------------------------
+
+def test_start_warms_buckets_no_compile_in_serving_path(serving_setup):
+    """start() pre-compiles every bucket; live traffic never hits XLA."""
+    engine, queries, ref_s, ref_l = serving_setup
+    # distinct ell_width → distinct jit cache entries for this test alone
+    eng = XMRServingEngine(engine.tree, ServeConfig(ell_width=48, max_batch=64))
+    mb = MicroBatcher(eng, BatchPolicy(max_batch=8, max_wait_ms=2.0))
+    before = _tree_infer._cache_size()
+    mb.start()
+    warmed = _tree_infer._cache_size()
+    assert warmed > before  # buckets compiled up front by start()
+    futs = mb.submit_csr(queries.slice_rows(np.arange(13)))  # buckets 8 + 8
+    for f in futs:
+        f.result(timeout=60)
+    mb.stop()
+    assert _tree_infer._cache_size() == warmed  # no compile after start
+
+
+def test_warmup_on_start_opt_out(serving_setup):
+    engine, *_ = serving_setup
+    eng = XMRServingEngine(engine.tree, ServeConfig(ell_width=56, max_batch=64))
+    mb = MicroBatcher(eng, BatchPolicy(max_batch=8), warmup_on_start=False)
+    before = _tree_infer._cache_size()
+    mb.start()
+    assert _tree_infer._cache_size() == before  # opted out: nothing compiled
+    mb.stop()
+
+
+def test_ready_batch_dispatches_before_blocking_on_inflight(serving_setup):
+    """A deadline-expired batch must come back from the worker's poll while
+    the in-flight batch is still on the device — not after _finalize."""
+    engine, *_ = serving_setup
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=16, max_wait_ms=1.0),
+                      warmup_on_start=False)
+
+    class _NeverReady:
+        def is_ready(self):
+            return False
+
+    stuck = _InFlight(reqs=[], scores=_NeverReady(), labels=_NeverReady(),
+                      t_dequeue=0.0, bucket=1, trigger=TRIGGER_SIZE)
+    mb.queue.put(_req(t=time.perf_counter() - 1.0))  # deadline long past
+    t0 = time.perf_counter()
+    reqs, trigger = mb._poll_ready(stuck, 1e-3)
+    assert trigger == TRIGGER_DEADLINE and len(reqs) == 1
+    assert time.perf_counter() - t0 < 0.5  # did not wait on device results
+
+
+# ---------------------------------------------------------------------------
+# 5. fault injection: a dispatch error fails only its own batch
+# ---------------------------------------------------------------------------
+
+def test_dispatch_fault_fails_only_its_batch(serving_setup):
+    engine, queries, ref_s, ref_l = serving_setup
+    eng = XMRServingEngine(engine.tree, engine.config)
+    calls = {"n": 0}
+    real_run = eng._run
+
+    def flaky_run(xi, xv):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected device fault")
+        return real_run(xi, xv)
+
+    eng._run = flaky_run
+    mb = MicroBatcher(eng, BatchPolicy(max_batch=16, max_wait_ms=5.0),
+                      warmup_on_start=False)
+    futs = mb.submit_csr(queries)  # 45 → batches 16/16/13; batch 2 faults
+    mb.start()
+    outcomes = []
+    for i, f in enumerate(futs):
+        try:
+            s, l = f.result(timeout=60)
+            np.testing.assert_array_equal(s, ref_s[i])
+            np.testing.assert_array_equal(l, ref_l[i])
+            outcomes.append("ok")
+        except RuntimeError as exc:
+            assert "injected device fault" in str(exc)
+            outcomes.append("fault")
+    # every future resolved exactly once: the faulted batch and nothing else
+    assert outcomes == ["ok"] * 16 + ["fault"] * 16 + ["ok"] * 13
+    # the worker survived — the queue keeps serving
+    f2 = mb.submit(*queries.row(0))
+    s, l = f2.result(timeout=60)
+    np.testing.assert_array_equal(s, ref_s[0])
+    mb.stop()
+
+
+# ---------------------------------------------------------------------------
+# 6. honest latency accounting
+# ---------------------------------------------------------------------------
+
+def test_amortized_batch_stats_stay_out_of_percentiles(serving_setup):
+    """serve_batch's per-call average must not masquerade as per-query
+    samples in the Table-4 percentile panel."""
+    engine, queries, ref_s, ref_l = serving_setup
+    eng = XMRServingEngine(engine.tree, engine.config)
+    eng.serve_batch(queries)
+    summ = eng.latency_summary()
+    assert summ["count"] == 0 and "p99_ms" not in summ
+    assert summ["amortized"]["calls"] == 1
+    assert summ["amortized"]["queries"] == queries.shape[0]
+    eng.serve_online(queries, limit=5)
+    summ = eng.latency_summary()
+    assert summ["count"] == 5 and "p99_ms" in summ  # 5 true per-query samples
+    assert summ["amortized"]["calls"] == 1          # untouched by online mode
+
+
+def test_latency_stats_record_routes_call_averages():
+    from repro.serving.metrics import LatencyStats
+
+    stats = LatencyStats()
+    stats.record(0.010)                 # one true per-query sample
+    stats.record(0.160, n_queries=16)   # legacy amortized record() call
+    summ = stats.summary()
+    assert summ["count"] == 1           # percentile series has ONE sample
+    assert summ["p99_ms"] == pytest.approx(10.0)
+    assert summ["amortized"]["calls"] == 1
+    assert summ["amortized"]["avg_ms_per_query"] == pytest.approx(10.0)
 
 
 @pytest.mark.slow

@@ -1,0 +1,86 @@
+"""Sharded (data-parallel replicated) serving == single-device serving.
+
+The engine replicates the tree over a 1-D device mesh and splits every
+dispatched bucket's batch dim across the replicas; per-query arithmetic is
+untouched, so results must be bitwise-identical. Runs in a subprocess so the
+forced host-device-count XLA flag never leaks into other tests (same pattern
+as tests/test_distributed_xmr.py).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+from repro.core import XMRTree
+from repro.serving import BatchPolicy, MicroBatcher, ServeConfig, XMRServingEngine
+from repro.sparse import random_sparse_csc, random_sparse_csr
+
+rng = np.random.default_rng(5)
+d, B = 120, 8
+Ws = [random_sparse_csc(d, 8, 10, rng, sibling_groups=B),
+      random_sparse_csc(d, 64, 10, rng, sibling_groups=B),
+      random_sparse_csc(d, 512, 10, rng, sibling_groups=B)]
+tree = XMRTree.from_weight_matrices(Ws, B)
+queries = random_sparse_csr(45, d, 15, rng)  # ragged tail: 45 = 16+16+13
+
+e1 = XMRServingEngine(tree, ServeConfig(ell_width=32, max_batch=64, shards=1))
+ref_s, ref_l = e1.serve_batch(queries)
+
+out = {"n_devices": len(jax.devices())}
+
+e2 = XMRServingEngine(tree, ServeConfig(ell_width=32, max_batch=64, shards=2))
+s2, l2 = e2.serve_batch(queries)
+out["batch2_bitwise"] = bool(
+    np.array_equal(s2, ref_s) and np.array_equal(l2, ref_l))
+
+e4 = XMRServingEngine(tree, ServeConfig(ell_width=32, max_batch=64, shards=4))
+so, lo = e4.serve_online(queries)
+out["online4_bitwise"] = bool(
+    np.array_equal(so, ref_s) and np.array_equal(lo, ref_l))
+
+with MicroBatcher(e4, BatchPolicy(max_batch=16, max_wait_ms=5.0)) as mb:
+    res = [f.result(timeout=120) for f in mb.submit_csr(queries)]
+mb_s = np.stack([r[0] for r in res])
+mb_l = np.stack([r[1] for r in res])
+out["microbatch4_bitwise"] = bool(
+    np.array_equal(mb_s, ref_s) and np.array_equal(mb_l, ref_l))
+
+summ = mb.metrics.summary()
+occ = summ.get("replica_occupancy", [])
+out["occupancy_len"] = len(occ)
+# real rows fill the bucket head: occupancy must be non-increasing by replica
+out["occupancy_monotone"] = bool(
+    all(occ[i] >= occ[i + 1] for i in range(len(occ) - 1)))
+out["mesh_devices"] = int(np.prod(list(e4.mesh.shape.values())))
+
+# bucket_for never forms a bucket the mesh cannot split
+out["min_bucket"] = int(e4.bucket_for(1))
+print(json.dumps(out))
+"""
+
+
+def test_sharded_serving_bitwise_matches_single_device():
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=420,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_devices"] == 4
+    assert res["batch2_bitwise"], res
+    assert res["online4_bitwise"], res
+    assert res["microbatch4_bitwise"], res
+    assert res["occupancy_len"] == 4, res
+    assert res["occupancy_monotone"], res
+    assert res["mesh_devices"] == 4
+    assert res["min_bucket"] == 4  # sharded dispatch always splits evenly
