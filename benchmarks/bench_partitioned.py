@@ -1,0 +1,191 @@
+"""Label-partitioned scatter–gather serving vs the unpartitioned tree.
+
+The enterprise claim (ISSUE 4): at 100M labels no single device holds the
+tree, so ``repro.index`` splits the label space P ways. This benchmark pins
+the two things that make that deployable:
+
+* ``partition_parity`` — the planner's default per-level sync mode returns
+  **bitwise-identical** scores and labels for every MSCM method. A
+  structural flag ``check_regression`` gates hard.
+* ``partition_memory_balanced`` — the manifest's per-partition
+  ``memory_bytes`` shrink ~1/P (within slack for the phantom pad chunk and
+  the ragged tail) and the LPT placement balances columns. Also gated.
+
+Timing rows report the scatter–gather overhead (per-level candidate
+exchange) against single-tree inference on the same device — the price of
+fitting a tree P× bigger than the device.
+
+``--multidevice`` (CI runs it under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) instead drives
+``ServeConfig(partitions=2, shards=2)`` through the ``MicroBatcher`` on a
+real (2 data × 2 model) mesh and emits the same parity flag.
+
+Run: ``python -m benchmarks.bench_partitioned [--n 48] [--partitions 2 4]
+[--multidevice] [--json PATH]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks.common import build_benchmark_tree, csv_line, time_fn
+from repro.data.xmr_data import PAPER_SHAPES, benchmark_queries, scaled_shape
+from repro.index import ScatterGatherPlanner, partition_tree, place
+
+
+def _build(max_labels: int, seed: int):
+    shape = PAPER_SHAPES["eurlex-4k"]
+    if shape.L > max_labels:
+        shape = scaled_shape(shape, max_labels / shape.L)
+    rng = np.random.default_rng(seed)
+    tree = build_benchmark_tree(shape, 16, rng)
+    return shape, tree, rng
+
+
+def run(
+    *,
+    n_queries: int = 48,
+    max_labels: int = 4096,
+    partitions=(2, 4),
+    methods=("mscm_dense", "mscm_searchsorted", "mscm_pallas_grouped"),
+    beam: int = 10,
+    topk: int = 10,
+    seed: int = 0,
+) -> List[str]:
+    shape, tree, rng = _build(max_labels, seed)
+    queries = benchmark_queries(shape, n_queries, rng)
+    import jax.numpy as jnp
+
+    xi, xv = map(jnp.asarray, queries.to_ell(256))
+    lines = []
+    for p in partitions:
+        idx = partition_tree(tree, p)
+        m = idx.manifest
+
+        # -- memory: the whole point — per-device bytes shrink ~1/P --------
+        # Slack covers the phantom pad chunk per level and the ragged tail.
+        balanced = m.max_partition_bytes() <= 1.5 * m.total_memory_bytes / p
+        lines.append(
+            csv_line(
+                f"{shape.name}/partitioned/P{p}-memory",
+                m.max_partition_bytes() / 1e3,  # kB, reported not gated
+                f"partition_memory_balanced={balanced} "
+                f"max_part_kb={m.max_partition_bytes() / 1e3:.0f} "
+                f"total_kb={m.total_memory_bytes / 1e3:.0f} "
+                f"router_kb={m.router_memory_bytes / 1e3:.1f} "
+                f"shrink={m.shrink_ratio():.2f}x level={m.level}",
+            )
+        )
+
+        for method in methods:
+            ref = tree.infer(xi, xv, beam=beam, topk=topk, method=method)
+            ref = jax.block_until_ready(ref)
+            planner = ScatterGatherPlanner(
+                idx, beam=beam, topk=topk, method=method
+            )
+            got = jax.block_until_ready(planner.infer(xi, xv))
+            parity = bool(
+                np.array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+                and np.array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+            )
+            t_ref = time_fn(
+                lambda: tree.infer(
+                    xi, xv, beam=beam, topk=topk, method=method
+                )
+            )
+            t_part = time_fn(lambda: planner.infer(xi, xv))
+            planner.profile(xi, xv)  # warm the per-partition path
+            prof = planner.profile(xi, xv)
+            lines.append(
+                csv_line(
+                    f"{shape.name}/partitioned/P{p}-{method}",
+                    1e6 * t_part / n_queries,
+                    f"partition_parity={parity} "
+                    f"overhead={t_part / t_ref:.2f}x "
+                    f"part_ms={'/'.join(f'{t:.1f}' for t in prof)}",
+                )
+            )
+    return lines
+
+
+def run_multidevice(*, n_queries: int = 32, max_labels: int = 4096,
+                    seed: int = 0) -> List[str]:
+    """P=2 x shards=2 through the MicroBatcher on 4 (forced) host devices."""
+    from repro.serving import (
+        BatchPolicy, MicroBatcher, ServeConfig, XMRServingEngine,
+    )
+
+    n_dev = len(jax.devices())
+    if n_dev < 4:
+        raise SystemExit(
+            f"--multidevice needs 4 devices, found {n_dev} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=4)"
+        )
+    shape, tree, rng = _build(max_labels, seed)
+    queries = benchmark_queries(shape, n_queries, rng)
+
+    ref_engine = XMRServingEngine(tree, ServeConfig(max_batch=64))
+    ref_s, ref_l = ref_engine.serve_batch(queries)
+
+    engine = XMRServingEngine(
+        tree, ServeConfig(max_batch=64, partitions=2, shards=2)
+    )
+    t0 = time.perf_counter()
+    with MicroBatcher(engine, BatchPolicy(max_batch=16, max_wait_ms=2.0)) as mb:
+        res = [f.result(timeout=300) for f in mb.submit_csr(queries)]
+    wall = time.perf_counter() - t0
+    s = np.stack([r[0] for r in res])
+    l = np.stack([r[1] for r in res])
+    parity = bool(np.array_equal(s, ref_s) and np.array_equal(l, ref_l))
+    occ = mb.metrics.summary().get("partition_occupancy", [])
+    mesh = dict(engine.mesh.shape)
+    return [
+        csv_line(
+            f"{shape.name}/partitioned/multidevice-P2xS2",
+            1e6 * wall / n_queries,
+            f"partition_parity={parity} mesh={mesh['data']}x{mesh['model']} "
+            f"occupancy={'/'.join(f'{o:.2f}' for o in occ)} "
+            f"devices={n_dev}",
+        )
+    ]
+
+
+def main(argv=None) -> List[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--max-labels", type=int, default=4096)
+    ap.add_argument("--partitions", type=int, nargs="+", default=[2, 4])
+    ap.add_argument("--beam", type=int, default=10)
+    ap.add_argument("--multidevice", action="store_true",
+                    help="P=2 x shards=2 MicroBatcher smoke on 4 forced "
+                         "host devices instead of the single-device panel")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args(argv)
+    if args.multidevice:
+        lines = run_multidevice(n_queries=args.n, max_labels=args.max_labels)
+    else:
+        lines = run(
+            n_queries=args.n, max_labels=args.max_labels,
+            partitions=tuple(args.partitions), beam=args.beam,
+        )
+    for line in lines:
+        print(line)
+    if args.json:
+        from benchmarks.run import _parse_rows
+
+        with open(args.json, "w") as f:
+            json.dump({"rows": _parse_rows(lines)}, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,14 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json"
 COUNTER_MARKERS = ("_tiles", "_share_", "matmul_share")
 
 # Boolean claims in derived fields: "<flag>=False" anywhere fails the gate.
-STRUCT_FLAGS = ("bitwise_identical", "amortizes", "p99_bounded", "shed_nonzero")
+STRUCT_FLAGS = (
+    "bitwise_identical",
+    "amortizes",
+    "p99_bounded",
+    "shed_nonzero",
+    "partition_parity",            # scatter-gather == unpartitioned, bitwise
+    "partition_memory_balanced",   # per-device model bytes shrink ~1/P
+)
 
 
 def _failed_flags(derived: str) -> List[str]:

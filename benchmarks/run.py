@@ -52,7 +52,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_enterprise, bench_mscm, bench_napkin,
-                            bench_parallel, bench_serving, bench_xmr_head)
+                            bench_parallel, bench_partitioned, bench_serving,
+                            bench_xmr_head)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -88,6 +89,9 @@ def main() -> None:
     # 1x/2x/4x capacity — the p99_bounded / shed_nonzero structural flags
     # in the guarantees row gate via check_regression.
     emit(bench_serving.run_overload(n_queries=96 if not args.full else 256))
+    # Label-partitioned scatter-gather index (ISSUE 4): bitwise parity per
+    # method + per-partition memory shrink flags gate via check_regression.
+    emit(bench_partitioned.run(n_queries=32 if not args.full else 128))
     emit(bench_xmr_head.run())
     if not args.skip_enterprise:
         emit(bench_enterprise.run(n_queries=16 if not args.full else 64))

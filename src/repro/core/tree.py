@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mscm as mscm_lib
-from repro.core.beam import beam_select, beam_step
+from repro.core.beam import beam_select, combine_scores
 from repro.core.chunked import ChunkedLayer, ColumnELLLayer
 from repro.sparse.csr import CSC
 
@@ -145,6 +145,89 @@ class XMRTree:
             tot += sum(np.asarray(t).nbytes for t in (l.chunk_rows, l.chunk_vals))
         return tot
 
+    # -- split / extract (label-space partitioning, repro.index) -----------
+    def head(self, level: int) -> "XMRTree":
+        """Top ``level`` stored layers as a standalone tree (the router).
+
+        The head's leaves are the nodes of level ``level - 1`` — exactly the
+        chunk ids of layer ``level`` — so ``head(level).infer(...,
+        beam=b, topk=b)`` reproduces the unpartitioned traversal's beam state
+        after ``level`` levels bit-for-bit (its internal "last level" uses
+        ``next_b = min(b, n_cols[level-1])``, the same clamp the full
+        traversal applies at a non-last level).
+        """
+        if not 1 <= level < self.depth:
+            raise ValueError(f"head level must be in [1, {self.depth}); got {level}")
+        return XMRTree(
+            layers=list(self.layers[:level]),
+            n_cols=self.n_cols[:level],
+            branching=self.branching[:level],
+            d=self.d,
+        )
+
+    def extract(self, level: int, chunk_start: int, chunk_end: int) -> "XMRTree":
+        """Sub-tree owning chunks ``[chunk_start, chunk_end)`` of layer
+        ``level`` down to the leaves, as a standalone :class:`XMRTree`.
+
+        Layer tensors are *slices* of this tree's arrays — the ELL pad widths
+        R/Rc are preserved, so every per-column dot product in the sub-tree is
+        bitwise-identical to the same column scored through the full tree.
+        Each level additionally gains one **phantom chunk** (all-sentinel
+        rows, zero values, logits exactly 0): out-of-partition beam entries
+        are parked there, their children ids land at/after the local label
+        count, and the standard phantom-column mask re-pins their scores to
+        ``NEG_INF`` at every level — they can never collide with a real
+        label or surface in a merge.
+        """
+        if not 1 <= level < self.depth:
+            raise ValueError(f"extract level must be in [1, {self.depth}); got {level}")
+        if not 0 <= chunk_start < chunk_end:
+            raise ValueError(f"bad chunk range [{chunk_start}, {chunk_end})")
+        layers, ncols = [], []
+        c0, c1 = chunk_start, chunk_end
+        for li in range(level, self.depth):
+            lay = self.layers[li]
+            b = self.branching[li]
+            c_global = lay.chunk_rows.shape[0]
+            # The last partition's range can overrun the ragged global tail
+            # at deeper levels (fewer real chunks than chunk_end * B): clamp.
+            c1 = min(c1, c_global)
+            if c0 >= c1:
+                raise ValueError(
+                    f"chunk range start {c0} has no real chunks at layer {li} "
+                    f"({c_global} total)"
+                )
+            n_local = min(c1 * b, self.n_cols[li]) - c0 * b
+            if n_local <= 0:
+                raise ValueError(
+                    f"chunk range [{c0}, {c1}) holds no real columns at "
+                    f"layer {li}"
+                )
+            cr = lay.chunk_rows[c0:c1]
+            cv = lay.chunk_vals[c0:c1]
+            phantom_rows = jnp.full((1,) + cr.shape[1:], self.d, cr.dtype)
+            phantom_vals = jnp.zeros((1,) + cv.shape[1:], cv.dtype)
+            col_r = lay.col_rows[c0 * b : c1 * b]
+            col_v = lay.col_vals[c0 * b : c1 * b]
+            pcol_r = jnp.full((b,) + col_r.shape[1:], self.d, col_r.dtype)
+            pcol_v = jnp.zeros((b,) + col_v.shape[1:], col_v.dtype)
+            layers.append(
+                TreeLayerArrays(
+                    chunk_rows=jnp.concatenate([cr, phantom_rows]),
+                    chunk_vals=jnp.concatenate([cv, phantom_vals]),
+                    col_rows=jnp.concatenate([col_r, pcol_r]),
+                    col_vals=jnp.concatenate([col_v, pcol_v]),
+                )
+            )
+            ncols.append(n_local)
+            c0, c1 = c0 * b, c1 * b
+        return XMRTree(
+            layers=layers,
+            n_cols=tuple(ncols),
+            branching=self.branching[level:],
+            d=self.d,
+        )
+
     # ------------------------------------------------------------------
     def infer(
         self,
@@ -156,6 +239,9 @@ class XMRTree:
         method: str = "mscm_dense",
         score_mode: str = "prod",
         qt: int = 8,
+        init_parent_ids: jax.Array | None = None,
+        init_scores: jax.Array | None = None,
+        clamp_chunks: bool = False,
     ) -> Tuple[jax.Array, jax.Array]:
         """Beam-search inference. Returns (scores [n, k], labels [n, k]).
 
@@ -163,6 +249,15 @@ class XMRTree:
         ``METHODS`` tuple); ``qt`` is the query-tile height of the grouped
         Pallas kernel (ignored by other methods). All methods return
         identical rankings.
+
+        ``init_parent_ids``/``init_scores`` (int32/f32 ``[n, b]``) start the
+        search from an externally-computed beam instead of the root — the
+        scatter–gather continuation path (``repro.index``): a router hands
+        each label partition its surviving beam entries. ``clamp_chunks``
+        parks out-of-range parents (id ≥ chunk count) on the last chunk —
+        the phantom chunk :meth:`extract` appends — instead of relying on
+        gather clamping, so masked beam entries score exactly ``NEG_INF``
+        children and never alias a real chunk.
         """
         return _tree_infer(
             tuple(self.layers),
@@ -171,11 +266,14 @@ class XMRTree:
             self.d,
             x_idx,
             x_val,
+            init_parent_ids,
+            init_scores,
             beam=beam,
             topk=topk,
             method=method,
             score_mode=score_mode,
             qt=qt,
+            clamp_chunks=clamp_chunks,
         )
 
 
@@ -222,10 +320,57 @@ def _masked_matmul(
     raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
 
 
+def level_combined(
+    layer: TreeLayerArrays,
+    branching: int,
+    d: int,
+    x_idx: jax.Array,
+    x_val: jax.Array,
+    x_dense: jax.Array | None,
+    parent_ids: jax.Array,     # int32 [n, b] chunk ids (already clamped)
+    parent_scores: jax.Array,  # f32 [n, b]
+    *,
+    method: str,
+    score_mode: str,
+    qt: int = 8,
+) -> jax.Array:
+    """One level's *combined* child scores σ(logit) ⊗ parent — f32 [n, b, B].
+
+    The single source of truth for per-level arithmetic: the in-tree beam
+    search and the scatter–gather planner (:mod:`repro.index.planner`) both
+    go through here, which is what makes a partition's owned rows
+    bitwise-identical to the same rows scored through the full tree.
+    """
+    n, b_cur = parent_ids.shape
+    block_q = jnp.repeat(jnp.arange(n, dtype=jnp.int32), b_cur)
+    block_c = parent_ids.reshape(-1)
+    if method == "mscm_pallas_grouped":
+        from repro.kernels import ops  # local import: kernels are optional
+
+        # Grouped path: chunk grouping, MXU-tiled matmul, and the σ⊗parent
+        # epilogue all happen inside the kernel dispatch — the combined beam
+        # scores are the only HBM round-trip per level.
+        return ops.mscm_grouped_level(
+            x_dense,
+            layer.chunk_rows,
+            layer.chunk_vals,
+            block_q,
+            block_c,
+            parent_scores.reshape(-1),
+            qt=qt,
+            mode=score_mode,
+        ).reshape(n, b_cur, branching)
+    logits = _masked_matmul(
+        layer, x_idx, x_val, x_dense, block_q, block_c, branching, d, method
+    ).reshape(n, b_cur, branching)
+    return combine_scores(parent_scores, logits, score_mode)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "n_cols", "branching", "d", "beam", "topk", "method", "score_mode", "qt"
+        "n_cols", "branching", "d", "beam", "topk", "method", "score_mode",
+        "qt", "clamp_chunks",
     ),
 )
 def _tree_infer(
@@ -235,12 +380,15 @@ def _tree_infer(
     d: int,
     x_idx: jax.Array,
     x_val: jax.Array,
+    init_parent_ids: jax.Array | None = None,
+    init_scores: jax.Array | None = None,
     *,
     beam: int,
     topk: int,
     method: str,
     score_mode: str,
     qt: int = 8,
+    clamp_chunks: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     n = x_idx.shape[0]
     needs_dense = method in (
@@ -248,55 +396,45 @@ def _tree_infer(
     )
     x_dense = mscm_lib.scatter_dense(x_idx, x_val, d) if needs_dense else None
 
-    # Layer 1 is the root: prediction 1 (Alg. 1 line 3); its children form
-    # chunk 0 of the first stored level.
-    parent_ids = jnp.zeros((n, 1), jnp.int32)
-    scores = (
-        jnp.ones((n, 1), jnp.float32)
-        if score_mode == "prod"
-        else jnp.zeros((n, 1), jnp.float32)
-    )
+    if init_parent_ids is not None:
+        # Continuation from an external beam (scatter–gather partitions).
+        parent_ids = init_parent_ids.astype(jnp.int32)
+        scores = init_scores.astype(jnp.float32)
+    else:
+        # Layer 1 is the root: prediction 1 (Alg. 1 line 3); its children
+        # form chunk 0 of the first stored level.
+        parent_ids = jnp.zeros((n, 1), jnp.int32)
+        scores = (
+            jnp.ones((n, 1), jnp.float32)
+            if score_mode == "prod"
+            else jnp.zeros((n, 1), jnp.float32)
+        )
     for li, layer in enumerate(layers):
-        b_cur = parent_ids.shape[1]
-        block_q = jnp.repeat(jnp.arange(n, dtype=jnp.int32), b_cur)
-        block_c = parent_ids.reshape(-1)
+        chunk_ids = parent_ids
+        if clamp_chunks:
+            # Phantom beam entries (id ≥ real chunk count) park on the last
+            # chunk — the all-sentinel phantom extract() appends, whose
+            # logits are exactly 0 and whose children ids fall at/after the
+            # local label count, so beam_select re-pins them to NEG_INF.
+            chunk_ids = jnp.minimum(
+                parent_ids, layer.chunk_rows.shape[0] - 1
+            )
         is_last = li == len(layers) - 1
         next_b = min(topk if is_last else beam, n_cols[li])
-        if method == "mscm_pallas_grouped":
-            from repro.kernels import ops  # local import: kernels are optional
-
-            # Grouped path: chunk grouping, MXU-tiled matmul, and the
-            # σ⊗parent epilogue all happen inside the kernel dispatch — the
-            # combined beam scores are the only HBM round-trip per level.
-            combined = ops.mscm_grouped_level(
-                x_dense,
-                layer.chunk_rows,
-                layer.chunk_vals,
-                block_q,
-                block_c,
-                scores.reshape(-1),
-                qt=qt,
-                mode=score_mode,
-            ).reshape(n, b_cur, branching[li])
-            parent_ids, scores = beam_select(
-                parent_ids, combined, n_cols[li], next_b
-            )
-            if not is_last:
-                # Keep the beam id-ascending: children of a sorted beam are
-                # a concatenation of sorted runs, so level l+1's block list
-                # inherits level l's chunk-major discipline and the global
-                # grouping argsort only merges across queries. Selection is
-                # canonical (beam_select), so reordering cannot change
-                # results.
-                perm = jnp.argsort(parent_ids, axis=1)
-                parent_ids = jnp.take_along_axis(parent_ids, perm, axis=1)
-                scores = jnp.take_along_axis(scores, perm, axis=1)
-        else:
-            logits = _masked_matmul(
-                layer, x_idx, x_val, x_dense, block_q, block_c,
-                branching[li], d, method,
-            ).reshape(n, b_cur, branching[li])
-            parent_ids, scores = beam_step(
-                parent_ids, scores, logits, n_cols[li], next_b, mode=score_mode
-            )
+        combined = level_combined(
+            layer, branching[li], d, x_idx, x_val, x_dense, chunk_ids,
+            scores, method=method, score_mode=score_mode, qt=qt,
+        )
+        parent_ids, scores = beam_select(
+            chunk_ids, combined, n_cols[li], next_b
+        )
+        if method == "mscm_pallas_grouped" and not is_last:
+            # Keep the beam id-ascending: children of a sorted beam are a
+            # concatenation of sorted runs, so level l+1's block list
+            # inherits level l's chunk-major discipline and the global
+            # grouping argsort only merges across queries. Selection is
+            # canonical (beam_select), so reordering cannot change results.
+            perm = jnp.argsort(parent_ids, axis=1)
+            parent_ids = jnp.take_along_axis(parent_ids, perm, axis=1)
+            scores = jnp.take_along_axis(scores, perm, axis=1)
     return scores, parent_ids

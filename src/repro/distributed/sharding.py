@@ -45,6 +45,32 @@ def replica_mesh(n: int, *, devices: Sequence[Any] | None = None) -> Mesh:
     return Mesh(np.asarray(devices[:n]), ("data",))
 
 
+def partition_mesh(
+    n_data: int, n_model: int, *, devices: Sequence[Any] | None = None
+) -> Mesh:
+    """2-D ``("data", "model")`` serving mesh over the first
+    ``n_data * n_model`` local devices.
+
+    The label-partitioned serving tier's topology (``repro.index``): each
+    **model column** hosts one or more label partitions (placed by
+    :mod:`repro.index.placement`), replicated down the column's ``n_data``
+    rows; batch dims split over ``"data"`` exactly as in
+    :func:`replica_mesh`, so model- and data-parallel dispatch compose.
+    """
+    need = n_data * n_model
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < need:
+        raise ValueError(
+            f"partition_mesh({n_data}x{n_model}): needs {need} devices, "
+            f"only {len(devices)} local "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count on CPU)"
+        )
+    return Mesh(
+        np.asarray(devices[:need]).reshape(n_data, n_model),
+        ("data", "model"),
+    )
+
+
 def axis_size(mesh: Mesh, axes) -> int:
     if axes is None:
         return 1

@@ -1,0 +1,37 @@
+"""Label-partitioned scatter–gather index: serve trees bigger than one device.
+
+``partition`` splits an :class:`~repro.core.tree.XMRTree` into a replicated
+router head plus P label-contiguous sub-trees (with a serializable
+manifest); ``placement`` packs the partitions onto a ``("data", "model")``
+device mesh balanced by ``memory_bytes``; ``planner`` runs the
+scatter–gather query path — bitwise-identical to the unpartitioned tree in
+its default per-level sync mode. See ``src/repro/index/README.md``.
+"""
+
+from repro.index.partition import (
+    PartitionedIndex,
+    PartitionInfo,
+    PartitionManifest,
+    default_split_level,
+    partition_tree,
+)
+from repro.index.placement import Placement, assign_partitions, place
+from repro.index.planner import (
+    ScatterGatherPlanner,
+    merge_topk,
+    reference_topk_width,
+)
+
+__all__ = [
+    "PartitionInfo",
+    "PartitionManifest",
+    "PartitionedIndex",
+    "Placement",
+    "ScatterGatherPlanner",
+    "assign_partitions",
+    "default_split_level",
+    "merge_topk",
+    "partition_tree",
+    "place",
+    "reference_topk_width",
+]

@@ -1,0 +1,219 @@
+"""Label-space partitioning of an :class:`~repro.core.tree.XMRTree`.
+
+The enterprise regime (paper §6: 100M labels, d = 4M) does not fit one
+device: the leaf ranker layer dominates model memory and grows linearly in
+L. :func:`partition_tree` splits the tree at a chosen level into P disjoint
+sub-trees — each owning a **contiguous label range** (labels are laid out in
+tree order, so a contiguous chunk range at any level induces a contiguous
+leaf range) — plus a small **router head** (the levels above the split,
+replicated everywhere; they hold ~L/(B-1) of the L leaf columns, a few
+percent of the weights).
+
+Every sub-tree layer is a *slice* of the parent tree's device arrays: the
+ELL pad widths R/Rc are preserved, so scoring a column through a partition
+is bitwise-identical to scoring it through the full tree. Each level also
+gains one all-sentinel **phantom chunk** where out-of-partition beam entries
+are parked (logits exactly 0, children past the local label count, re-masked
+to ``NEG_INF`` every level — see :meth:`XMRTree.extract`).
+
+A :class:`PartitionManifest` records, per partition, the chunk range at the
+split level, the owned label range, resident ``memory_bytes``, and a content
+hash of the sliced weights — the unit a placement policy balances and an
+operator audits (format documented in ``src/repro/index/README.md``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.tree import XMRTree
+
+MANIFEST_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionInfo:
+    """One partition's row in the manifest."""
+
+    pid: int
+    chunk_start: int      # chunk range at the split level (disjoint, sorted)
+    chunk_end: int
+    label_start: int      # owned leaf-label range [label_start, label_end)
+    label_end: int
+    memory_bytes: int     # resident chunked-weight bytes (incl. phantom pad)
+    content_hash: str     # sha256 over the sliced layer tensors
+
+    @property
+    def n_labels(self) -> int:
+        return self.label_end - self.label_start
+
+
+@dataclasses.dataclass
+class PartitionManifest:
+    """Serializable description of a label-partitioned index."""
+
+    level: int                      # split level (index into stored layers)
+    n_partitions: int
+    n_labels: int                   # global leaf count
+    d: int
+    branching: Tuple[int, ...]
+    router_memory_bytes: int        # replicated head layers
+    total_memory_bytes: int         # unpartitioned tree, for shrink ratios
+    partitions: List[PartitionInfo]
+    version: int = MANIFEST_VERSION
+
+    def max_partition_bytes(self) -> int:
+        return max(p.memory_bytes for p in self.partitions)
+
+    def shrink_ratio(self) -> float:
+        """Unpartitioned bytes over the largest per-device resident slice."""
+        resident = self.max_partition_bytes() + self.router_memory_bytes
+        return self.total_memory_bytes / max(resident, 1)
+
+    def to_json(self) -> str:
+        doc = dataclasses.asdict(self)
+        doc["branching"] = list(self.branching)
+        return json.dumps(doc, indent=2)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PartitionManifest":
+        doc = json.loads(text)
+        if doc.get("version") != MANIFEST_VERSION:
+            raise ValueError(
+                f"manifest version {doc.get('version')} != {MANIFEST_VERSION}"
+            )
+        parts = [PartitionInfo(**p) for p in doc.pop("partitions")]
+        doc["branching"] = tuple(doc["branching"])
+        return cls(partitions=parts, **doc)
+
+
+def _content_hash(tree: XMRTree) -> str:
+    h = hashlib.sha256()
+    for lay in tree.layers:
+        for t in (lay.chunk_rows, lay.chunk_vals):
+            a = np.asarray(t)
+            h.update(str((a.shape, str(a.dtype))).encode())
+            h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class PartitionedIndex:
+    """A router head + P label-partitioned sub-trees, ready to serve."""
+
+    head: XMRTree                 # levels [0, level): replicated router
+    parts: List[XMRTree]          # P disjoint sub-trees, label-contiguous
+    manifest: PartitionManifest
+    n_cols: Tuple[int, ...]       # global per-level column counts
+    branching: Tuple[int, ...]
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.parts)
+
+    @property
+    def level(self) -> int:
+        return self.manifest.level
+
+    @property
+    def n_labels(self) -> int:
+        return self.manifest.n_labels
+
+    @property
+    def d(self) -> int:
+        return self.manifest.d
+
+    def label_ranges(self) -> List[Tuple[int, int]]:
+        return [(p.label_start, p.label_end) for p in self.manifest.partitions]
+
+    def hit_counts(self, labels: np.ndarray) -> np.ndarray:
+        """Per-partition count of result labels (occupancy accounting)."""
+        labels = np.asarray(labels).reshape(-1)
+        edges = [p.label_start for p in self.manifest.partitions]
+        edges.append(self.manifest.partitions[-1].label_end)
+        valid = labels[(labels >= 0) & (labels < self.n_labels)]
+        hist, _ = np.histogram(valid, bins=np.asarray(edges))
+        return hist.astype(np.int64)
+
+
+def default_split_level(tree: XMRTree, n_partitions: int) -> int:
+    """Smallest level whose chunk count can host P contiguous partitions.
+
+    Splitting as high as possible partitions the *most* layers (every layer
+    at or below the split is sliced 1/P), so the replicated router head stays
+    minimal.
+    """
+    for level in range(1, tree.depth):
+        if tree.n_cols[level - 1] >= n_partitions:
+            return level
+    raise ValueError(
+        f"tree has no level with >= {n_partitions} chunks "
+        f"(n_cols={tree.n_cols}); reduce partitions"
+    )
+
+
+def partition_tree(
+    tree: XMRTree, n_partitions: int, *, level: int | None = None
+) -> PartitionedIndex:
+    """Split ``tree`` into a router head + ``n_partitions`` sub-trees.
+
+    Chunks of layer ``level`` (== nodes of level ``level - 1``) are divided
+    into contiguous, near-equal ranges — with a B-ary layout equal chunk
+    counts are equal label counts, up to the global ragged tail which lands
+    in the last partition (deliberately: the uneven-range edge case stays
+    exercised).
+    """
+    if n_partitions < 1:
+        raise ValueError(f"n_partitions must be >= 1; got {n_partitions}")
+    if level is None:
+        level = default_split_level(tree, n_partitions)
+    n_chunks = tree.n_cols[level - 1]
+    if n_partitions > n_chunks:
+        raise ValueError(
+            f"partitions={n_partitions} exceeds the {n_chunks} chunks of "
+            f"level {level}"
+        )
+    bounds = np.linspace(0, n_chunks, n_partitions + 1).round().astype(int)
+    leaf_span = int(np.prod(tree.branching[level:]))
+
+    head = tree.head(level)
+    parts, infos = [], []
+    for pid in range(n_partitions):
+        c0, c1 = int(bounds[pid]), int(bounds[pid + 1])
+        sub = tree.extract(level, c0, c1)
+        parts.append(sub)
+        label_start = c0 * leaf_span
+        infos.append(
+            PartitionInfo(
+                pid=pid,
+                chunk_start=c0,
+                chunk_end=c1,
+                label_start=label_start,
+                label_end=label_start + sub.n_labels,
+                memory_bytes=sub.memory_bytes(),
+                content_hash=_content_hash(sub),
+            )
+        )
+    assert infos[-1].label_end == tree.n_labels
+    manifest = PartitionManifest(
+        level=level,
+        n_partitions=n_partitions,
+        n_labels=tree.n_labels,
+        d=tree.d,
+        branching=tree.branching,
+        router_memory_bytes=head.memory_bytes(),
+        total_memory_bytes=tree.memory_bytes(),
+        partitions=infos,
+    )
+    return PartitionedIndex(
+        head=head,
+        parts=parts,
+        manifest=manifest,
+        n_cols=tree.n_cols,
+        branching=tree.branching,
+    )

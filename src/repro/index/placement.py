@@ -1,0 +1,109 @@
+"""Partition → device placement over a ``("data", "model")`` mesh.
+
+Each partition is pinned to one **model column** of the mesh; a column's
+``n_data`` devices are data-parallel replicas of everything placed there
+(batch dims split over ``"data"``, exactly PR 3's replica dispatch — the two
+axes compose: ``ServeConfig(partitions=P, shards=N)`` is model-parallel ×
+data-parallel through the same micro-batching front end).
+
+More partitions than columns is normal (one big host serving a tree sliced
+P ways): partitions are packed onto columns with longest-processing-time
+greedy bin packing over the manifest's per-partition ``memory_bytes``, the
+classic 4/3-approximation for balanced bins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import partition_mesh
+from repro.index.partition import PartitionedIndex, PartitionManifest
+
+
+def assign_partitions(
+    memory_bytes: Sequence[int], n_bins: int
+) -> List[int]:
+    """LPT greedy: heaviest partition first onto the lightest bin.
+
+    Returns the bin (mesh model-column) index per partition.
+    """
+    if n_bins < 1:
+        raise ValueError(f"n_bins must be >= 1; got {n_bins}")
+    order = np.argsort(-np.asarray(memory_bytes, dtype=np.int64), kind="stable")
+    load = np.zeros(n_bins, dtype=np.int64)
+    out = [0] * len(memory_bytes)
+    for pid in order:
+        bin_ = int(np.argmin(load))
+        out[int(pid)] = bin_
+        load[bin_] += int(memory_bytes[pid])
+    return out
+
+
+@dataclasses.dataclass
+class Placement:
+    """Resolved device plan for a partitioned index."""
+
+    mesh: Mesh                       # ("data", "model"), shape (n_data, n_model)
+    assignments: List[int]           # partition -> model column
+    array_shardings: List[Any]       # per partition: replicate over its column
+    batch_shardings: List[Any]       # per partition: batch split over "data"
+    coordinator: Any                 # device for route/gather/select steps
+
+    @property
+    def n_data(self) -> int:
+        return int(self.mesh.shape["data"])
+
+    @property
+    def n_model(self) -> int:
+        return int(self.mesh.shape["model"])
+
+    def column_loads(self, manifest: PartitionManifest) -> List[int]:
+        """Resident model bytes per mesh column (balance diagnostics)."""
+        load = [0] * self.n_model
+        for info, col in zip(manifest.partitions, self.assignments):
+            load[col] += info.memory_bytes
+        return load
+
+
+def place(
+    index: PartitionedIndex,
+    *,
+    shards: int = 1,
+    devices: Optional[Sequence[Any]] = None,
+) -> Placement:
+    """Map ``index``'s partitions onto local devices.
+
+    ``shards`` is the data-parallel width (PR 3's replica count); the model
+    width is ``min(P, n_devices // shards)`` — as many columns as the device
+    budget affords, never more than there are partitions.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1; got {shards}")
+    if shards > len(devices):
+        raise ValueError(
+            f"shards={shards}: only {len(devices)} local devices "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count on CPU)"
+        )
+    n_model = max(1, min(index.n_partitions, len(devices) // shards))
+    mesh = partition_mesh(shards, n_model, devices=devices)
+    mem = [p.memory_bytes for p in index.manifest.partitions]
+    assignments = assign_partitions(mem, n_model)
+    array_shardings, batch_shardings = [], []
+    for col in assignments:
+        col_devices = np.asarray(mesh.devices)[:, col]
+        sub = Mesh(col_devices, ("data",))
+        array_shardings.append(NamedSharding(sub, P()))
+        batch_shardings.append(NamedSharding(sub, P("data")))
+    return Placement(
+        mesh=mesh,
+        assignments=assignments,
+        array_shardings=array_shardings,
+        batch_shardings=batch_shardings,
+        coordinator=devices[0],
+    )

@@ -1,0 +1,369 @@
+"""Scatter–gather query planner over a :class:`PartitionedIndex`.
+
+Query path (``sync="level"``, the default, **bitwise-exact**):
+
+1. **route** — the replicated router head runs the ordinary jitted beam
+   search over the levels above the split, producing the global beam.
+2. **scatter** — the beam is broadcast to every partition; each partition
+   scores *only the beam rows it owns* (out-of-range rows park on its
+   phantom chunk) through :func:`repro.core.tree.level_combined` — the same
+   arithmetic the unpartitioned traversal uses, on sliced layers with
+   identical ELL pad widths, so owned rows are bit-identical.
+3. **gather + select** — the planner reassembles the global ``[n, b, B]``
+   candidate tensor from the owners and applies the canonical
+   (score desc, id asc) :func:`~repro.core.beam.beam_select`. Steps 2–3
+   repeat per partitioned level; the final level's select *is* the global
+   top-k — results are **bitwise-identical** to the unpartitioned tree for
+   every MSCM method (pinned by tests and a structural benchmark flag).
+
+Why per-level gathers: beam search prunes globally at every level. A
+partition-local beam keeps candidates global pruning discarded, and their
+descendants can out-rank reference results at the leaves — a single final
+merge is a (weakly better, recall ≥) *different* ranking. That mode exists
+too (``sync="final"``): each partition runs the whole jitted sub-tree
+traversal from the router handoff (one merge, no per-level sync — the
+low-communication production topology); its top-k scores dominate the exact
+result's but are not bitwise-reproducible, so serving defaults to
+``"level"``.
+
+Communication is activations only — ``[n, b]`` beams out, ``[n, b, B]``
+candidates back, per level — while the weights stay put: with a
+:class:`~repro.index.placement.Placement` each partition lives on its own
+device (column of the ``("data", "model")`` mesh), batches split over the
+data axis, and partitions score concurrently (JAX dispatch is async; the
+gather only synchronizes at the select).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mscm as mscm_lib
+from repro.core.beam import NEG_INF, beam_select
+from repro.core.tree import level_combined
+from repro.index.partition import PartitionedIndex
+from repro.index.placement import Placement
+
+
+def reference_topk_width(
+    n_cols: Sequence[int], branching: Sequence[int], beam: int, topk: int
+) -> int:
+    """Output width of the unpartitioned ``infer`` for these settings.
+
+    Mirrors the traversal's clamps: ``next_b = min(beam-or-topk, n_cols)``
+    further clamped by the candidate count ``b · B`` (jnp slicing clamps).
+    """
+    b = 1
+    for li, ncol in enumerate(n_cols):
+        want = topk if li == len(n_cols) - 1 else beam
+        b = min(want, int(ncol), b * int(branching[li]))
+    return b
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("branching", "d", "method", "score_mode", "qt"),
+)
+def _owned_level_scores(
+    layer,
+    x_idx: jax.Array,
+    x_val: jax.Array,
+    x_dense: Optional[jax.Array],
+    parent_ids: jax.Array,     # int32 [n, b] GLOBAL chunk ids at this level
+    parent_scores: jax.Array,  # f32 [n, b]
+    chunk_start: jax.Array,    # scalar: partition's first global chunk
+    chunk_count: jax.Array,    # scalar: partition's real chunk count
+    *,
+    branching: int,
+    d: int,
+    method: str,
+    score_mode: str,
+    qt: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """One partition's owned slice of a level: ([n, b, B] combined, owned).
+
+    Unowned rows park on the phantom chunk (index ``chunk_count`` — the
+    all-sentinel pad :meth:`XMRTree.extract` appends) and return exactly
+    ``NEG_INF``; owned rows are bitwise what the full tree computes for the
+    same (query, parent) pair. ``chunk_start``/``chunk_count`` are traced so
+    equal-shape partitions share one compilation.
+    """
+    owned = (parent_ids >= chunk_start) & (parent_ids < chunk_start + chunk_count)
+    local_ids = jnp.where(owned, parent_ids - chunk_start, chunk_count)
+    local_scores = jnp.where(owned, parent_scores, NEG_INF)
+    combined = level_combined(
+        layer, branching, d, x_idx, x_val, x_dense,
+        local_ids.astype(jnp.int32), local_scores,
+        method=method, score_mode=score_mode, qt=qt,
+    )
+    return jnp.where(owned[..., None], combined, NEG_INF), owned
+
+
+@functools.partial(jax.jit, static_argnames=("n_cols", "next_b"))
+def _gather_select(
+    parent_ids: jax.Array,
+    parts_combined: Tuple[jax.Array, ...],
+    parts_owned: Tuple[jax.Array, ...],
+    *,
+    n_cols: int,
+    next_b: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Compose the owners' slices into the global candidate tensor + select.
+
+    Every beam row is owned by at most one partition; rows owned by none
+    (global phantoms) stay ``NEG_INF``, exactly what the canonical mask
+    pins them to in the unpartitioned traversal.
+    """
+    acc = jnp.full_like(parts_combined[0], NEG_INF)
+    for combined, owned in zip(parts_combined, parts_owned):
+        acc = jnp.where(owned[..., None], combined, acc)
+    return beam_select(parent_ids, acc, n_cols, next_b)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def merge_topk(
+    scores: jax.Array, labels: jax.Array, *, width: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Canonical (score desc, id asc) top-``width`` of concatenated
+    per-partition candidates — the ``sync="final"`` merge."""
+    neg_sorted, id_sorted = jax.lax.sort(
+        (-scores, labels), dimension=1, num_keys=2
+    )
+    return -neg_sorted[:, :width], id_sorted[:, :width].astype(jnp.int32)
+
+
+_scatter_dense = jax.jit(mscm_lib.scatter_dense, static_argnums=2)
+
+SYNC_MODES = ("level", "final")
+
+
+class ScatterGatherPlanner:
+    """Executes partitioned queries; see the module docstring for the path.
+
+    With ``placement`` the partitions' layer tensors are copied onto their
+    assigned mesh columns at construction and every scatter/gather hop is an
+    explicit ``device_put`` (batch dim split over the column's data axis);
+    without one, everything runs on the default device — same arithmetic,
+    same results.
+    """
+
+    def __init__(
+        self,
+        index: PartitionedIndex,
+        *,
+        beam: int = 10,
+        topk: int = 10,
+        method: str = "mscm_dense",
+        score_mode: str = "prod",
+        qt: int = 8,
+        sync: str = "level",
+        placement: Optional[Placement] = None,
+    ) -> None:
+        if sync not in SYNC_MODES:
+            raise ValueError(f"sync={sync!r}; choose from {SYNC_MODES}")
+        self.index = index
+        self.beam = beam
+        self.topk = topk
+        self.method = method
+        self.score_mode = score_mode
+        self.qt = qt
+        self.sync = sync
+        self.placement = placement
+        self.parts = index.parts
+        if placement is not None:
+            if len(placement.array_shardings) != index.n_partitions:
+                raise ValueError(
+                    f"placement covers {len(placement.array_shardings)} "
+                    f"partitions, index has {index.n_partitions}"
+                )
+            self.parts = [
+                p.device_put(sh)
+                for p, sh in zip(index.parts, placement.array_shardings)
+            ]
+        self._needs_dense = method in (
+            "mscm_dense", "mscm_pallas", "mscm_pallas_pregather",
+            "mscm_pallas_grouped",
+        )
+
+    # -- device hops --------------------------------------------------------
+    def _to_partition(self, pid: int, *arrays):
+        if self.placement is None:
+            return arrays
+        sh = self.placement.batch_shardings[pid]
+        return tuple(jax.device_put(a, sh) for a in arrays)
+
+    def _to_coordinator(self, *arrays):
+        if self.placement is None:
+            return arrays
+        dev = self.placement.coordinator
+        return tuple(jax.device_put(a, dev) for a in arrays)
+
+    # -- query path ---------------------------------------------------------
+    def _route(self, x_idx: jax.Array, x_val: jax.Array):
+        """Router head: the global beam after the levels above the split."""
+        return self.index.head.infer(
+            x_idx, x_val, beam=self.beam, topk=self.beam,
+            method=self.method, score_mode=self.score_mode, qt=self.qt,
+        )
+
+    def _partition_inputs(self, x_idx, x_val):
+        """Per-partition (xi, xv, x_dense) resident on the partition's devices.
+
+        The dense [n, d+1] query table is the expensive piece (d can be
+        millions); partitions sharing a batch sharding — all of them when no
+        placement is set, column-mates under LPT packing — share one copy.
+        """
+        out, by_sharding = [], {}
+        for pid in range(self.index.n_partitions):
+            key = (
+                self.placement.batch_shardings[pid]
+                if self.placement is not None else None
+            )
+            if key not in by_sharding:
+                xi_p, xv_p = self._to_partition(pid, x_idx, x_val)
+                xd_p = (
+                    _scatter_dense(xi_p, xv_p, self.index.d)
+                    if self._needs_dense else None
+                )
+                by_sharding[key] = (xi_p, xv_p, xd_p)
+            out.append(by_sharding[key])
+        return out
+
+    def infer(
+        self, x_idx: jax.Array, x_val: jax.Array
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Global (scores [n, k], labels [n, k]) for a query batch."""
+        scores, parent_ids = self._route(x_idx, x_val)
+        if self.sync == "final":
+            return self._infer_final(x_idx, x_val, parent_ids, scores)
+        return self._infer_level(x_idx, x_val, parent_ids, scores)
+
+    def _infer_level(self, x_idx, x_val, parent_ids, scores):
+        idx = self.index
+        inputs = self._partition_inputs(x_idx, x_val)
+        infos = idx.manifest.partitions
+        depth = len(idx.n_cols)
+        for li in range(idx.level, depth):
+            is_last = li == depth - 1
+            next_b = min(
+                self.topk if is_last else self.beam, idx.n_cols[li]
+            )
+            combined, owned = [], []
+            # Chunk ranges at this level: the split ranges scaled by the
+            # branching products of the levels in between (tree order).
+            span = int(np.prod(idx.branching[idx.level:li], dtype=np.int64)) \
+                if li > idx.level else 1
+            for pid, (part, info) in enumerate(zip(self.parts, infos)):
+                lay = part.layers[li - idx.level]
+                c_real = lay.chunk_rows.shape[0] - 1  # minus phantom pad
+                ids_p, sc_p = self._to_partition(pid, parent_ids, scores)
+                xi_p, xv_p, xd_p = inputs[pid]
+                comb_p, own_p = _owned_level_scores(
+                    lay, xi_p, xv_p, xd_p, ids_p, sc_p,
+                    jnp.int32(info.chunk_start * span), jnp.int32(c_real),
+                    branching=idx.branching[li], d=idx.d,
+                    method=self.method, score_mode=self.score_mode,
+                    qt=self.qt,
+                )
+                comb_p, own_p = self._to_coordinator(comb_p, own_p)
+                combined.append(comb_p)
+                owned.append(own_p)
+            parent_ids, scores = _gather_select(
+                parent_ids, tuple(combined), tuple(owned),
+                n_cols=idx.n_cols[li], next_b=next_b,
+            )
+        return scores, parent_ids
+
+    def _run_partition(self, part, info, ids_p, sc_p, xi_p, xv_p):
+        """One partition's whole-sub-tree traversal from the router beam.
+
+        Localizes the global beam (out-of-range rows -> phantom chunk,
+        score ``NEG_INF``) and runs the jitted continuation — shared by the
+        ``"final"`` merge path and :meth:`profile` so the measured traversal
+        can never drift from the served one.
+        """
+        c_real = info.chunk_end - info.chunk_start
+        owned = (ids_p >= info.chunk_start) & (ids_p < info.chunk_end)
+        local_ids = jnp.where(owned, ids_p - info.chunk_start, c_real)
+        local_sc = jnp.where(owned, sc_p, NEG_INF)
+        return part.infer(
+            xi_p, xv_p, beam=self.beam, topk=self.topk,
+            method=self.method, score_mode=self.score_mode, qt=self.qt,
+            init_parent_ids=local_ids.astype(jnp.int32),
+            init_scores=local_sc, clamp_chunks=True,
+        )
+
+    def _infer_final(self, x_idx, x_val, parent_ids, scores):
+        """Single-merge mode: whole sub-tree traversals, one canonical merge.
+
+        Not bitwise-reproducible against the unpartitioned tree — each
+        partition prunes locally, so the merged top-k *dominates* the exact
+        result (every merged score >= its exact counterpart, recall >=).
+        """
+        idx = self.index
+        inputs = self._partition_inputs(x_idx, x_val)
+        width = reference_topk_width(
+            idx.n_cols, idx.branching, self.beam, self.topk
+        )
+        out_s, out_l = [], []
+        for pid, (part, info) in enumerate(
+            zip(self.parts, idx.manifest.partitions)
+        ):
+            ids_p, sc_p = self._to_partition(pid, parent_ids, scores)
+            xi_p, xv_p, _ = inputs[pid]
+            s, l = self._run_partition(part, info, ids_p, sc_p, xi_p, xv_p)
+            # Globalize: real leaves get the partition's label offset; local
+            # phantoms (id >= the partition's label count) are pushed past
+            # every real global id so they can never tie-break into the merge.
+            gl = jnp.where(
+                l < part.n_labels,
+                l + info.label_start,
+                idx.n_labels + info.label_start + l,
+            )
+            s, gl = self._to_coordinator(s, gl)
+            out_s.append(s)
+            out_l.append(gl)
+        s_cat = jnp.concatenate(out_s, axis=1)
+        l_cat = jnp.concatenate(out_l, axis=1)
+        if s_cat.shape[1] < width:  # degenerate config; cannot fill the panel
+            raise ValueError(
+                f"merged candidate width {s_cat.shape[1]} < reference width "
+                f"{width}; raise beam/topk or lower partitions"
+            )
+        return merge_topk(s_cat, l_cat, width=width)
+
+    # -- diagnostics --------------------------------------------------------
+    def profile(
+        self, x_idx: jax.Array, x_val: jax.Array
+    ) -> List[float]:
+        """Blocking per-partition sub-tree latency (ms) for one batch.
+
+        Runs each partition's whole-sub-tree traversal (the ``"final"``
+        path) serially with a blocking gather — the per-partition latency
+        panel for benchmarks and capacity planning.
+        """
+        scores, parent_ids = jax.block_until_ready(
+            self._route(x_idx, x_val)
+        )
+        out = []
+        for pid, (part, info) in enumerate(
+            zip(self.parts, self.index.manifest.partitions)
+        ):
+            ids_p, sc_p = self._to_partition(pid, parent_ids, scores)
+            xi_p, xv_p = self._to_partition(pid, x_idx, x_val)
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                self._run_partition(part, info, ids_p, sc_p, xi_p, xv_p)
+            )
+            out.append(1e3 * (time.perf_counter() - t0))
+        return out
+
+    def hit_counts(self, labels: np.ndarray) -> np.ndarray:
+        """Per-partition share of a result set (occupancy accounting)."""
+        return self.index.hit_counts(labels)

@@ -28,13 +28,26 @@ Shed policies:
     The oldest *queued* request is dropped and the new one admitted. Favors
     freshness: under overload the oldest request is the most likely to blow
     its deadline anyway, so shedding it wastes the least useful work.
+
+    With **priority classes** (``MicroBatcher.submit(priority=...)``, higher
+    = more important) the victim is the oldest request of the *lowest*
+    priority present — weighted shedding: background traffic is sacrificed
+    first, and a low-priority arrival at a queue full of higher-priority
+    work is itself refused rather than displacing it.
+
+``max_queue_depth="auto"``
+    Resolved by ``MicroBatcher.start()`` from the measured drain rate times
+    the deadline budget (see :meth:`MicroBatcher._auto_queue_depth`): the
+    queue holds no more work than the device can clear within a request's
+    latency budget. Until resolved (a batcher that never started), the
+    bound is inactive.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Union
 
 SHED_REJECT = "reject"
 SHED_OLDEST = "shed-oldest"
@@ -74,10 +87,11 @@ class AdmissionPolicy:
     """Overload policy for a :class:`~repro.serving.batcher.MicroBatcher`.
 
     ``max_queue_depth=None`` disables the bound (the pre-admission-control
-    behavior); ``deadline_ms=None`` disables per-request deadlines.
+    behavior); ``"auto"`` defers it to the batcher's capacity probe at
+    ``start()``; ``deadline_ms=None`` disables per-request deadlines.
     """
 
-    max_queue_depth: Optional[int] = None
+    max_queue_depth: Union[int, str, None] = None
     shed_policy: str = SHED_REJECT
     deadline_ms: Optional[float] = None
 
@@ -86,8 +100,14 @@ class AdmissionPolicy:
             raise ValueError(
                 f"shed_policy={self.shed_policy!r}; choose from {SHED_POLICIES}"
             )
-        if self.max_queue_depth is not None and self.max_queue_depth < 1:
-            raise ValueError("max_queue_depth must be >= 1 (or None)")
+        if isinstance(self.max_queue_depth, str):
+            if self.max_queue_depth != "auto":
+                raise ValueError(
+                    f"max_queue_depth={self.max_queue_depth!r}; the only "
+                    'string value is "auto"'
+                )
+        elif self.max_queue_depth is not None and self.max_queue_depth < 1:
+            raise ValueError('max_queue_depth must be >= 1, None, or "auto"')
 
 
 class AdmissionController:
@@ -112,20 +132,33 @@ class AdmissionController:
         """Decide admission for ``req`` against the live deque ``queue``.
 
         Returns True if ``req`` should be appended. On shed, the victim's
-        future (the new request under ``reject``, the queue head under
-        ``shed-oldest``) resolves with :class:`Overloaded`.
+        future (the new request under ``reject``, the oldest lowest-priority
+        queued request under ``shed-oldest``) resolves with
+        :class:`Overloaded`. ``"auto"`` depth is inactive until the batcher
+        resolves it at ``start()``.
         """
         depth = self.policy.max_queue_depth
-        if depth is None or len(queue) < depth:
+        if depth is None or depth == "auto" or len(queue) < depth:
             return True
-        if self.policy.shed_policy == SHED_REJECT:
-            req.future.set_exception(Overloaded(depth, SHED_REJECT))
-            self.metrics.record_shed()
-            return False
-        victim = queue.popleft()
-        victim.future.set_exception(Overloaded(depth, SHED_OLDEST))
-        self.metrics.record_shed()
-        return True
+        prio = getattr(req, "priority", 0)
+        if self.policy.shed_policy == SHED_OLDEST:
+            # Weighted shed-oldest: victim = oldest request of the lowest
+            # priority present — unless everything queued outranks the new
+            # arrival, in which case the arrival itself is refused.
+            floor = min(getattr(r, "priority", 0) for r in queue)
+            if floor <= prio:
+                vi = next(
+                    i for i, r in enumerate(queue)
+                    if getattr(r, "priority", 0) == floor
+                )
+                victim = queue[vi]
+                del queue[vi]  # not .remove(): dataclass eq on array fields
+                victim.future.set_exception(Overloaded(depth, SHED_OLDEST))
+                self.metrics.record_shed(getattr(victim, "priority", 0))
+                return True
+        req.future.set_exception(Overloaded(depth, self.policy.shed_policy))
+        self.metrics.record_shed(prio)
+        return False
 
     def expire(self, reqs, now: Optional[float] = None):
         """Split a formed batch into live requests, failing expired ones.

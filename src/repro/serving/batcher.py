@@ -69,6 +69,7 @@ class _Request:
     future: Future
     t_enqueue: float
     t_deadline: Optional[float] = None  # absolute perf_counter deadline
+    priority: int = 0         # higher = more important (weighted shedding)
 
 
 class RequestQueue:
@@ -240,11 +241,34 @@ class MicroBatcher:
             raise RuntimeError("MicroBatcher cannot be restarted after stop()")
         if self.warmup_on_start:
             self.engine.warmup_buckets(self.engine.tree.d, self.policy.max_batch)
+        if self.admission.max_queue_depth == "auto":
+            self.admission.max_queue_depth = self._auto_queue_depth()
         self._thread = threading.Thread(
             target=self._worker, name="xmr-microbatcher", daemon=True
         )
         self._thread.start()
         return self
+
+    def _auto_queue_depth(self) -> int:
+        """Capacity-aware admission bound: measured drain rate x deadline.
+
+        Probes the device-side service time of one full coalescing bucket
+        (buckets are warm by now — ``measure_batch_seconds`` re-warms if
+        not) and bounds the queue at the number of requests the device can
+        clear within the latency budget: the policy deadline when one is
+        set, else ten deadline-trigger windows (a queue deeper than that
+        cannot meet the coalescing latency the policy encodes). Never below
+        ``max_batch`` so a full bucket can always form.
+        """
+        secs = self.engine.measure_batch_seconds(self.policy.max_batch)
+        bucket = self.engine.bucket_for(self.policy.max_batch)
+        drain_qps = bucket / max(secs, 1e-9)
+        budget_ms = self.admission.deadline_ms
+        if budget_ms is None:
+            budget_ms = 10.0 * self.policy.max_wait_ms
+        return max(
+            self.policy.max_batch, int(np.ceil(drain_qps * budget_ms * 1e-3))
+        )
 
     def stop(self) -> None:
         """Stop accepting requests, drain the queue, join the worker."""
@@ -266,12 +290,16 @@ class MicroBatcher:
         val: np.ndarray,
         *,
         deadline_ms: Optional[float] = None,
+        priority: int = 0,
     ) -> Future:
         """Enqueue one sparse query; resolves to (scores [k], labels [k]).
 
         Always returns a Future — a request shed by admission control comes
         back with :class:`~repro.serving.admission.Overloaded` already set.
-        ``deadline_ms`` overrides the policy's default per-request deadline.
+        ``deadline_ms`` overrides the policy's default per-request deadline;
+        ``priority`` (higher = more important) steers weighted shedding
+        under the ``shed-oldest`` policy: low-priority requests are
+        sacrificed first.
         """
         self.metrics.record_offered()
         t_enqueue = time.perf_counter()
@@ -283,6 +311,7 @@ class MicroBatcher:
             t_deadline=(
                 t_enqueue + 1e-3 * deadline_ms if deadline_ms is not None else None
             ),
+            priority=priority,
         )
         self._controller.stamp_deadline(req)
         self.queue.put(req)
@@ -357,9 +386,13 @@ class MicroBatcher:
         jax.block_until_ready((inflight.scores, inflight.labels))
         t_done = time.perf_counter()
         s = np.asarray(inflight.scores)
-        l = self.engine._map_labels(np.asarray(inflight.labels))
+        leaves = np.asarray(inflight.labels)
+        l = self.engine._map_labels(leaves)
         for i, req in enumerate(inflight.reqs):
             req.future.set_result((s[i], l[i]))
+        # Partition occupancy uses raw leaves (pre-label_perm) and only the
+        # real rows — bucket padding tails are sentinel junk.
+        hits = self.engine.partition_hit_counts(leaves[: len(inflight.reqs)])
         self.metrics.record_batch(
             t_enqueue=[r.t_enqueue for r in inflight.reqs],
             t_dequeue=inflight.t_dequeue,
@@ -367,6 +400,7 @@ class MicroBatcher:
             bucket=inflight.bucket,
             trigger=inflight.trigger,
             shards=self.engine.config.shards,
+            partition_hits=hits,
         )
 
     def _fail(self, reqs: List[_Request], exc: BaseException) -> None:

@@ -24,13 +24,20 @@ replicas, so one formed micro-batch occupies all N devices instead of
 serializing on one. Per-query arithmetic is untouched by the split —
 results stay bitwise-identical to single-device serving (pinned by
 tests/test_sharded_serving.py).
+
+Partitioned dispatch (``ServeConfig(partitions=P)``): the tree is split into
+P label-contiguous sub-trees over a ``("data", "model")`` mesh
+(:mod:`repro.index`) and every dispatch runs the scatter-gather planner —
+per-device model bytes shrink ~1/P while results stay bitwise-identical in
+the default ``partition_sync="level"`` mode. Composes with ``shards=N``:
+model-parallel partitions x data-parallel replicas behind one batcher.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -52,8 +59,12 @@ class ServeConfig:
     qt: int = 8                   # grouped-kernel query-tile height
     # -- sharded dispatch ---------------------------------------------------
     shards: int = 1               # data-parallel device replicas per dispatch
+    # -- label-partitioned dispatch (repro.index) ---------------------------
+    partitions: int = 1           # label-space partitions (model parallelism)
+    partition_level: Optional[int] = None  # split level (None = auto)
+    partition_sync: str = "level"  # "level" (bitwise-exact) | "final"
     # -- overload policy (consumed by MicroBatcher) -------------------------
-    queue_depth: Optional[int] = None   # admission bound (None = unbounded)
+    queue_depth: Union[int, str, None] = None  # bound | "auto" | unbounded
     shed_policy: str = "reject"         # "reject" | "shed-oldest"
     deadline_ms: Optional[float] = None  # default per-request deadline
 
@@ -91,20 +102,46 @@ class XMRServingEngine:
         self.stats = LatencyStats()
         self.mesh = None
         self._batch_sharding = None
+        self.index = None
+        self.placement = None
+        self.planner = None
         shards = self.config.shards
-        if shards > 1:
+        if shards > 1 and shards & (shards - 1):
+            raise ValueError(
+                f"shards={shards} must be a power of two (buckets are)"
+            )
+        if shards > self.config.max_batch:
+            raise ValueError(
+                f"shards={shards} exceeds max_batch={self.config.max_batch}"
+            )
+        if self.config.partitions > 1:
+            # Label-partitioned dispatch: the tree is cut into P sub-trees
+            # placed over a ("data", "model") mesh; every _run goes through
+            # the scatter-gather planner (model-parallel x data-parallel,
+            # bitwise-identical in the default "level" sync mode).
+            from repro.index import ScatterGatherPlanner, partition_tree, place
+
+            c = self.config
+            self.index = partition_tree(
+                tree, c.partitions, level=c.partition_level
+            )
+            self.placement = place(self.index, shards=shards)
+            self.planner = ScatterGatherPlanner(
+                self.index,
+                beam=c.beam,
+                topk=c.topk,
+                method=self.method,
+                score_mode=c.score_mode,
+                qt=c.qt,
+                sync=c.partition_sync,
+                placement=self.placement,
+            )
+            self.mesh = self.placement.mesh
+        elif shards > 1:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
             from repro.distributed.sharding import replica_mesh
 
-            if shards & (shards - 1):
-                raise ValueError(
-                    f"shards={shards} must be a power of two (buckets are)"
-                )
-            if shards > self.config.max_batch:
-                raise ValueError(
-                    f"shards={shards} exceeds max_batch={self.config.max_batch}"
-                )
             self.mesh = replica_mesh(shards)
             # Replicate the tree once; every dispatch then splits its batch
             # dim over the mesh's data axis.
@@ -139,6 +176,10 @@ class XMRServingEngine:
 
     def _run(self, xi: jax.Array, xv: jax.Array):
         c = self.config
+        if self.planner is not None:
+            # Scatter-gather over the label partitions; the planner owns all
+            # device placement (per-partition batch sharding included).
+            return self.planner.infer(xi, xv)
         if self._batch_sharding is not None:
             xi = jax.device_put(xi, self._batch_sharding)
             xv = jax.device_put(xv, self._batch_sharding)
@@ -230,6 +271,32 @@ class XMRServingEngine:
         if self.label_perm is None:
             return leaves
         return self.label_perm[leaves]
+
+    def partition_hit_counts(self, leaves: np.ndarray) -> Optional[np.ndarray]:
+        """Per-partition result share for a batch of *raw* leaf ids
+        (pre-``label_perm``); None when serving unpartitioned."""
+        if self.planner is None:
+            return None
+        return self.planner.hit_counts(leaves)
+
+    def measure_batch_seconds(self, batch: int, iters: int = 3) -> float:
+        """Median wall seconds for one ``batch``-sized dispatch (warmed).
+
+        The drain-rate probe behind ``queue_depth="auto"``: sentinel (empty)
+        queries traverse the same levels and sorts as real ones, so the
+        figure bounds the device-side service time per bucket.
+        """
+        bucket = self.bucket_for(batch)
+        d = self.tree.d
+        xi = jnp.full((bucket, self.config.ell_width), d, jnp.int32)
+        xv = jnp.zeros((bucket, self.config.ell_width), jnp.float32)
+        jax.block_until_ready(self._run(xi, xv))  # warm this bucket
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(self._run(xi, xv))
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
 
     def latency_summary(self) -> dict:
         return self.stats.summary()

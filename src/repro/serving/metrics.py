@@ -103,8 +103,10 @@ class ServerMetrics:
     bucket_sizes: List[int] = dataclasses.field(default_factory=list)
     triggers: List[str] = dataclasses.field(default_factory=list)
     batch_shards: List[int] = dataclasses.field(default_factory=list)
+    partition_hits: List[np.ndarray] = dataclasses.field(default_factory=list)
     offered: int = 0
     shed: int = 0
+    shed_by_priority: Dict[int, int] = dataclasses.field(default_factory=dict)
     deadline_missed: int = 0
     _t_first: float | None = None
     _t_last: float | None = None
@@ -117,9 +119,12 @@ class ServerMetrics:
         with self._lock:
             self.offered += 1
 
-    def record_shed(self) -> None:
+    def record_shed(self, priority: int = 0) -> None:
         with self._lock:
             self.shed += 1
+            self.shed_by_priority[priority] = (
+                self.shed_by_priority.get(priority, 0) + 1
+            )
 
     def record_deadline_miss(self) -> None:
         with self._lock:
@@ -135,10 +140,17 @@ class ServerMetrics:
         bucket: int,
         trigger: str,
         shards: int = 1,
+        partition_hits=None,
     ) -> None:
-        """Record one dispatched micro-batch of len(t_enqueue) requests."""
+        """Record one dispatched micro-batch of len(t_enqueue) requests.
+
+        ``partition_hits`` (per-partition result counts from the engine's
+        label-partitioned planner) feeds the partition-occupancy panel.
+        """
         compute = 1e3 * (t_done - t_dequeue)
         with self._lock:
+            if partition_hits is not None:
+                self.partition_hits.append(np.asarray(partition_hits))
             for te in t_enqueue:
                 self.queue_wait_ms.append(1e3 * (t_dequeue - te))
                 self.e2e_ms.append(1e3 * (t_done - te))
@@ -166,6 +178,10 @@ class ServerMetrics:
                     out["offered"] = self.offered
                     out["shed"] = self.shed
                     out["shed_rate"] = self.shed / self.offered
+                    if self.shed_by_priority:
+                        out["shed_by_priority"] = dict(
+                            sorted(self.shed_by_priority.items())
+                        )
                     out["deadline_missed"] = self.deadline_missed
                     out["deadline_miss_rate"] = self.deadline_missed / self.offered
                 return out
@@ -195,8 +211,18 @@ class ServerMetrics:
             out["offered"] = offered
             out["shed"] = self.shed
             out["shed_rate"] = self.shed / offered
+            if self.shed_by_priority:
+                out["shed_by_priority"] = dict(
+                    sorted(self.shed_by_priority.items())
+                )
             out["deadline_missed"] = self.deadline_missed
             out["deadline_miss_rate"] = self.deadline_missed / offered
+            if self.partition_hits:
+                hits = np.sum(self.partition_hits, axis=0).astype(float)
+                total = max(hits.sum(), 1.0)
+                out["partition_occupancy"] = [
+                    round(float(h / total), 4) for h in hits
+                ]
             max_shards = max(self.batch_shards, default=1)
             if max_shards > 1:
                 occ = np.zeros(max_shards)

@@ -145,8 +145,92 @@ def test_shed_requests_complete_under_sustained_overload(setup):
     assert s["shed_rate"] == pytest.approx(shed / 120)
 
 
+def test_weighted_shed_prefers_low_priority(setup):
+    """shed-oldest with priority classes: the victim is the oldest request
+    of the LOWEST priority present, never a higher-priority one."""
+    engine, queries, *_ = setup
+    mb = _idle_batcher(
+        engine, AdmissionPolicy(max_queue_depth=3, shed_policy="shed-oldest")
+    )
+    lo0 = mb.submit(*queries.row(0), priority=0)
+    hi = mb.submit(*queries.row(1), priority=2)
+    lo1 = mb.submit(*queries.row(2), priority=0)
+    # queue full; a new priority-1 request sheds the OLDEST priority-0 one
+    mid = mb.submit(*queries.row(3), priority=1)
+    assert isinstance(lo0.exception(timeout=1), Overloaded)
+    assert not hi.done() and not lo1.done() and not mid.done()
+    # another arrival sheds the remaining priority-0 request, not hi/mid
+    mid2 = mb.submit(*queries.row(4), priority=1)
+    assert isinstance(lo1.exception(timeout=1), Overloaded)
+    assert not hi.done() and not mid.done() and not mid2.done()
+    s = mb.metrics.summary()
+    assert s["shed"] == 2 and s["shed_by_priority"] == {0: 2}
+    mb.queue.close()
+
+
+def test_weighted_shed_rejects_outranked_arrival(setup):
+    """A low-priority arrival at a queue full of higher-priority work is
+    itself refused instead of displacing it."""
+    engine, queries, *_ = setup
+    mb = _idle_batcher(
+        engine, AdmissionPolicy(max_queue_depth=2, shed_policy="shed-oldest")
+    )
+    hi0 = mb.submit(*queries.row(0), priority=5)
+    hi1 = mb.submit(*queries.row(1), priority=5)
+    lo = mb.submit(*queries.row(2), priority=1)
+    assert isinstance(lo.exception(timeout=1), Overloaded)
+    assert not hi0.done() and not hi1.done()
+    assert len(mb.queue) == 2
+    assert mb.metrics.summary()["shed_by_priority"] == {1: 1}
+    mb.queue.close()
+
+
+def test_priority_served_results_identical(setup):
+    """Priorities steer shedding only — served results stay bitwise."""
+    engine, queries, ref_s, ref_l = setup
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=8, max_wait_ms=1.0),
+                      warmup_on_start=False).start()
+    futs = [mb.submit(*queries.row(i), priority=i % 3) for i in range(10)]
+    for i, f in enumerate(futs):
+        s, l = f.result(timeout=60)
+        np.testing.assert_array_equal(s, ref_s[i])
+        np.testing.assert_array_equal(l, ref_l[i])
+    mb.stop()
+
+
 # ---------------------------------------------------------------------------
-# 2. per-request deadlines, enforced at dispatch
+# 2. capacity-aware queue depth ("auto")
+# ---------------------------------------------------------------------------
+
+def test_auto_queue_depth_resolves_on_start(setup):
+    """queue_depth="auto": start() derives the bound from the measured
+    drain rate x the deadline budget; before start() it admits freely."""
+    engine, queries, *_ = setup
+    cfg = ServeConfig(ell_width=32, max_batch=64, queue_depth="auto",
+                      shed_policy="shed-oldest", deadline_ms=100.0)
+    eng = XMRServingEngine(engine.tree, cfg)
+    mb = MicroBatcher(eng, BatchPolicy(max_batch=8, max_wait_ms=1.0))
+    assert mb.admission.max_queue_depth == "auto"
+    mb.start()
+    depth = mb.admission.max_queue_depth
+    assert isinstance(depth, int) and depth >= 8  # never below max_batch
+    # the resolved bound is drain_qps * 100ms, floored at max_batch
+    secs = eng.measure_batch_seconds(8)
+    expect = max(8, int(np.ceil(eng.bucket_for(8) / secs * 0.1)))
+    assert depth == pytest.approx(expect, rel=1.0)  # same order of magnitude
+    fut = mb.submit(*queries.row(0))
+    fut.result(timeout=60)
+    mb.stop()
+
+
+def test_auto_queue_depth_validation():
+    with pytest.raises(ValueError):
+        AdmissionPolicy(max_queue_depth="adaptive")
+    AdmissionPolicy(max_queue_depth="auto")  # accepted
+
+
+# ---------------------------------------------------------------------------
+# 3. per-request deadlines, enforced at dispatch
 # ---------------------------------------------------------------------------
 
 def test_expired_request_never_reaches_device(setup):
