@@ -313,6 +313,8 @@ def main(argv=None) -> List[str]:
     ap.add_argument("--queue-depth", type=int, default=None,
                     help="admission bound for --overload (default "
                          "2 * max_batch)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
     args = ap.parse_args(argv)
     if args.overload:
         lines = run_overload(
@@ -333,6 +335,17 @@ def main(argv=None) -> List[str]:
         )
     for line in lines:
         print(line)
+    if args.json:
+        import json as json_mod
+        import sys as sys_mod
+
+        from benchmarks.run import _parse_rows
+
+        with open(args.json, "w") as f:
+            json_mod.dump(
+                {"rows": _parse_rows(lines), "completed": True}, f, indent=2
+            )
+        print(f"# wrote {args.json}", file=sys_mod.stderr)
     return lines
 
 

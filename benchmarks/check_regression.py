@@ -1,4 +1,4 @@
-"""Compare a fresh benchmark JSON against the committed baseline artifact.
+"""Compare a fresh benchmark JSON against baseline / previous-run artifacts.
 
 CI runs the benchmark smoke (``python -m benchmarks.run --json
 BENCH_ci.json``) and then::
@@ -11,9 +11,25 @@ compared as ratios; shared-runner drift makes hard timing gates flaky, so by
 default regressions are *reported* and only ``--strict`` turns them into a
 nonzero exit. Structural rows are always strict: a ``<flag>=False`` for any
 flag in ``STRUCT_FLAGS`` (bitwise identity, batch amortization, overload
-P99 boundedness, nonzero shed under 4x load) in any derived field fails the
-check regardless of mode — those encode correctness/behavioral claims, not
-wall-clock.
+P99 boundedness, nonzero shed under 4x load, pipelined/overlap/cache
+claims) in any derived field fails the check regardless of mode — those
+encode correctness/behavioral claims, not wall-clock.
+
+The fresh JSON must also carry ``"completed": true`` (benchmarks.run stamps
+it) — a crashed run's partial artifact must never pass the gate vacuously.
+
+**Perf trajectory** (ISSUE 5): CI additionally downloads the previous
+successful main run's artifact and runs::
+
+    python -m benchmarks.check_regression BENCH_ci.json --trend prev/BENCH_ci.json
+
+Trend mode compares run-over-run instead of against the committed baseline:
+timing drift beyond ``--trend-ratio`` (default 1.5x) *warns* (consecutive
+runs share much less environment than a committed baseline assumes — the
+trajectory artifact, not one comparison, is the signal), while structural
+flags still gate hard. ``--append-trajectory BENCH_trajectory.jsonl``
+appends this run's one-line summary to the rolling JSONL artifact CI
+re-uploads each run, which is where the trajectory accumulates.
 """
 
 from __future__ import annotations
@@ -38,6 +54,9 @@ STRUCT_FLAGS = (
     "shed_nonzero",
     "partition_parity",            # scatter-gather == unpartitioned, bitwise
     "partition_memory_balanced",   # per-device model bytes shrink ~1/P
+    "pipelined_parity",            # overlapped sync == level sync, bitwise
+    "overlap_speedup",             # pipelined >= level throughput, multidevice
+    "cache_parity",                # hot-beam cache hit == cold run, bitwise
 )
 
 
@@ -57,11 +76,45 @@ def _is_counter(name: str) -> bool:
     return any(m in name for m in COUNTER_MARKERS)
 
 
+def check_completed(current: dict) -> List[str]:
+    """The fresh artifact must assert it ran to completion.
+
+    ``benchmarks.run`` / ``bench_partitioned --json`` stamp
+    ``"completed": true`` only when every sub-benchmark returned; a crashed
+    run writes ``false`` (and lists ``failures``). A missing key means the
+    artifact predates the contract or came from a crashed writer — refuse
+    those too, or a truncated JSON would pass the gate with zero rows.
+    """
+    if current.get("completed") is True:
+        return []
+    failures = current.get("failures") or []
+    detail = f" (failures: {failures})" if failures else ""
+    return [
+        "artifact incomplete: manifest key 'completed' is "
+        f"{current.get('completed')!r}{detail} — refusing to gate on a "
+        "partial benchmark run"
+    ]
+
+
 def compare(
-    current: dict, baseline: dict, max_ratio: float
+    current: dict,
+    baseline: dict,
+    max_ratio: float,
+    *,
+    timing_gates: bool = True,
+    missing_gates: bool = True,
 ) -> Tuple[List[str], List[str]]:
     """Returns (report_lines, failures). Failures are structural or — for
-    timing rows — ratio breaches beyond ``max_ratio``."""
+    timing rows, when ``timing_gates`` — ratio breaches beyond
+    ``max_ratio``; with ``timing_gates=False`` (trend mode) breaches are
+    reported in the lines but never appended to failures. ``missing_gates``
+    controls whether a structural row present in ``baseline`` but absent
+    from ``current`` fails: against the *committed* baseline that is the
+    whole point (dropping a structural row must not quietly pass), but in
+    trend mode the reference is just the previous run — a PR that
+    legitimately renames or retires a row (and regenerates the committed
+    baseline) must not be unfailable until a main run without the row
+    lands, so trend mode only reports it."""
     cur, base = _rows_by_name(current), _rows_by_name(baseline)
     report: List[str] = []
     failures: List[str] = []
@@ -77,12 +130,20 @@ def compare(
         if _is_counter(name):
             if ratio > 1.02:  # counters should not grow
                 tag = "  << COUNTER REGRESSION"
-                failures.append(f"{name}: counter {b['us_per_call']:.0f} -> "
-                                f"{row['us_per_call']:.0f}")
+                if missing_gates:
+                    # Like missing rows, counter drift is a *committed-
+                    # baseline* contract: a PR that legitimately changes a
+                    # counter regenerates the baseline, but cannot rewrite
+                    # the previous run's artifact — trend mode only warns.
+                    failures.append(
+                        f"{name}: counter {b['us_per_call']:.0f} -> "
+                        f"{row['us_per_call']:.0f}")
         elif ratio > max_ratio:
             tag = f"  << {ratio:.2f}x SLOWER than baseline"
-            failures.append(f"{name}: {ratio:.2f}x over baseline "
-                            f"({b['us_per_call']:.1f} -> {row['us_per_call']:.1f} us)")
+            if timing_gates:
+                failures.append(f"{name}: {ratio:.2f}x over baseline "
+                                f"({b['us_per_call']:.1f} -> "
+                                f"{row['us_per_call']:.1f} us)")
         report.append(f"{name:55s} {b['us_per_call']:>12.1f} "
                       f"{row['us_per_call']:>12.1f} {ratio:>7.2f}x{tag}")
     missing = sorted(set(base) - set(cur))
@@ -90,14 +151,34 @@ def compare(
         line = f"{name:55s} (row disappeared from current run)"
         b_derived = base[name].get("derived", "")
         if _is_counter(name) or _has_flags(b_derived):
-            # Dropping a structural row must not quietly pass the gate —
-            # that would erase exactly the coverage this check exists for.
-            failures.append(
-                f"{name}: structural/counter row missing from current run"
-            )
             line += "  << MISSING STRUCTURAL ROW"
+            if missing_gates:
+                # Dropping a structural row must not quietly pass the gate —
+                # that would erase exactly the coverage this check exists for.
+                failures.append(
+                    f"{name}: structural/counter row missing from current run"
+                )
         report.append(line)
     return report, failures
+
+
+def trajectory_row(current: dict) -> dict:
+    """One compact line for the rolling ``BENCH_trajectory.jsonl`` artifact."""
+    return {
+        "sha": os.environ.get("GITHUB_SHA", ""),
+        "run_id": os.environ.get("GITHUB_RUN_ID", ""),
+        "ref": os.environ.get("GITHUB_REF_NAME", ""),
+        "wall_s": current.get("wall_s"),
+        "completed": current.get("completed"),
+        "rows": {
+            r["name"]: r["us_per_call"] for r in current.get("rows", [])
+        },
+    }
+
+
+def append_trajectory(current: dict, path: str) -> None:
+    with open(path, "a") as f:
+        f.write(json.dumps(trajectory_row(current)) + "\n")
 
 
 def main(argv=None) -> int:
@@ -109,14 +190,62 @@ def main(argv=None) -> int:
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 on flagged timing rows (structural "
                          "failures always exit 1)")
+    ap.add_argument("--trend", default=None, metavar="PREV_JSON",
+                    help="compare against the previous run's artifact "
+                         "instead of the committed baseline; timing drift "
+                         "warns, structural flags still gate")
+    ap.add_argument("--trend-ratio", type=float, default=1.5,
+                    help="run-over-run timing ratio that triggers a "
+                         "trend warning")
+    ap.add_argument("--append-trajectory", default=None, metavar="JSONL",
+                    help="append this run's summary row to the rolling "
+                         "trajectory artifact")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
         current = json.load(f)
+
+    completeness = check_completed(current)
+
+    if args.append_trajectory:
+        append_trajectory(current, args.append_trajectory)
+        print(f"# appended trajectory row to {args.append_trajectory}")
+
+    if args.trend is not None:
+        # -- run-over-run trajectory mode -------------------------------
+        if not os.path.exists(args.trend):
+            print(f"# no previous-run artifact at {args.trend}; "
+                  "trend comparison skipped (first run on this branch?)")
+            _, failures = compare(current, {"rows": []}, args.trend_ratio)
+            failures += completeness
+            for fail in failures:
+                print(f"FAIL {fail}")
+            return 1 if failures else 0
+        with open(args.trend) as f:
+            prev = json.load(f)
+        report, failures = compare(
+            current, prev, args.trend_ratio,
+            timing_gates=False, missing_gates=False,
+        )
+        failures += completeness
+        print(f"{'name':55s} {'previous_us':>12s} {'current_us':>12s} "
+              f"{'ratio':>8s}")
+        for line in report:
+            print(line)
+        warned = sum("SLOWER" in line for line in report)
+        if warned:
+            print(f"# {warned} row(s) drifted over {args.trend_ratio}x vs "
+                  "the previous run (trend mode: warning only — watch "
+                  "BENCH_trajectory.jsonl)")
+        for fail in failures:
+            print(f"FAIL {fail}")
+        return 1 if failures else 0
+
     if not os.path.exists(args.baseline):
         print(f"# no baseline at {args.baseline}; skipping comparison")
         # Structural flags are still checked against the fresh run alone.
         _, failures = compare(current, {"rows": []}, args.max_ratio)
+        failures += completeness
         for fail in failures:
             print(f"FAIL {fail}")
         return 1 if failures else 0
@@ -124,10 +253,14 @@ def main(argv=None) -> int:
         baseline = json.load(f)
 
     report, failures = compare(current, baseline, args.max_ratio)
+    failures += completeness
     print(f"{'name':55s} {'baseline_us':>12s} {'current_us':>12s} {'ratio':>8s}")
     for line in report:
         print(line)
-    structural = [f for f in failures if "structural" in f or "counter" in f]
+    structural = [
+        f for f in failures
+        if "structural" in f or "counter" in f or "incomplete" in f
+    ]
     timing = [f for f in failures if f not in structural]
     for fail in failures:
         print(f"FAIL {fail}")

@@ -42,7 +42,7 @@ def _parse_rows(lines: list) -> list:
     return rows
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (slow; default is CI-size)")
@@ -58,8 +58,24 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     all_lines = []
+    failures = []
 
-    def emit(lines) -> None:
+    def emit(name, fn, *fn_args, **fn_kwargs) -> None:
+        # One failed sub-benchmark must not silently produce a *partial*
+        # artifact that passes the regression gate vacuously: record the
+        # failure, keep running the rest, exit nonzero, and stamp the JSON
+        # "completed": false so check_regression refuses it outright.
+        try:
+            lines = fn(*fn_args, **fn_kwargs)
+        except (KeyboardInterrupt, SystemExit):
+            raise  # a cancelled run must abort, not keep benchmarking
+        except Exception as exc:
+            import traceback
+
+            traceback.print_exc()
+            print(f"# FAILED {name}: {exc!r}", file=sys.stderr)
+            failures.append(f"{name}: {exc!r}")
+            return
         for line in lines:
             print(line, flush=True)
             all_lines.append(line)
@@ -73,28 +89,32 @@ def main() -> None:
     else:
         mscm_kw = dict(datasets=["eurlex-4k", "wiki10-31k", "amazon-670k"],
                        max_labels=32_768, n_batch=64)
-    emit(bench_mscm.run(mscm_kw["datasets"],
-                        max_labels=mscm_kw["max_labels"],
-                        n_batch=mscm_kw["n_batch"]))
+    emit("mscm", bench_mscm.run, mscm_kw["datasets"],
+         max_labels=mscm_kw["max_labels"], n_batch=mscm_kw["n_batch"])
     # Device-grouped MXU path (ISSUE 2): per-level tile accounting + the
     # bitwise-identity flag ride along in BENCH_ci.json.
-    emit(bench_mscm.grouped_report(max_labels=mscm_kw["max_labels"],
-                                   n=mscm_kw["n_batch"]))
-    emit(bench_mscm.profile_share())
-    emit(bench_napkin.run(max_labels=mscm_kw["max_labels"]))
-    emit(bench_parallel.run(max_labels=mscm_kw["max_labels"],
-                            batches=(1, 4, 16, 64)))
-    emit(bench_serving.run(n_queries=64 if not args.full else 256))
+    emit("mscm_grouped", bench_mscm.grouped_report,
+         max_labels=mscm_kw["max_labels"], n=mscm_kw["n_batch"])
+    emit("profile_share", bench_mscm.profile_share)
+    emit("napkin", bench_napkin.run, max_labels=mscm_kw["max_labels"])
+    emit("parallel", bench_parallel.run, max_labels=mscm_kw["max_labels"],
+         batches=(1, 4, 16, 64))
+    emit("serving", bench_serving.run,
+         n_queries=64 if not args.full else 256)
     # Overload-safety smoke (ISSUE 3): bounded-queue admission control at
     # 1x/2x/4x capacity — the p99_bounded / shed_nonzero structural flags
     # in the guarantees row gate via check_regression.
-    emit(bench_serving.run_overload(n_queries=96 if not args.full else 256))
-    # Label-partitioned scatter-gather index (ISSUE 4): bitwise parity per
-    # method + per-partition memory shrink flags gate via check_regression.
-    emit(bench_partitioned.run(n_queries=32 if not args.full else 128))
-    emit(bench_xmr_head.run())
+    emit("serving_overload", bench_serving.run_overload,
+         n_queries=96 if not args.full else 256)
+    # Label-partitioned scatter-gather index (ISSUE 4) + pipelined overlap
+    # and hot-beam cache (ISSUE 5): bitwise parity per method x sync mode,
+    # memory shrink and cache flags gate via check_regression.
+    emit("partitioned", bench_partitioned.run,
+         n_queries=32 if not args.full else 128)
+    emit("xmr_head", bench_xmr_head.run)
     if not args.skip_enterprise:
-        emit(bench_enterprise.run(n_queries=16 if not args.full else 64))
+        emit("enterprise", bench_enterprise.run,
+             n_queries=16 if not args.full else 64)
 
     wall = time.time() - t0
     if args.json:
@@ -104,13 +124,23 @@ def main() -> None:
                     "rows": _parse_rows(all_lines),
                     "full": args.full,
                     "wall_s": round(wall, 1),
+                    # Required by check_regression: a partial artifact from
+                    # a crashed run must never pass the gate vacuously.
+                    "completed": not failures,
+                    "failures": failures,
                 },
                 f,
                 indent=2,
             )
         print(f"# wrote {args.json}", file=sys.stderr)
     print(f"# total bench time {wall:.0f}s", file=sys.stderr)
+    if failures:
+        print(f"# {len(failures)} sub-benchmark(s) FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"#   {f}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mscm as mscm_lib
-from repro.core.beam import beam_select, combine_scores
+from repro.core.beam import NEG_INF, beam_select, combine_scores
 from repro.core.chunked import ChunkedLayer, ColumnELLLayer
 from repro.sparse.csr import CSC
 
@@ -364,6 +364,50 @@ def level_combined(
         layer, x_idx, x_val, x_dense, block_q, block_c, branching, d, method
     ).reshape(n, b_cur, branching)
     return combine_scores(parent_scores, logits, score_mode)
+
+
+def owned_level_combined(
+    layer: TreeLayerArrays,
+    branching: int,
+    d: int,
+    x_idx: jax.Array,
+    x_val: jax.Array,
+    x_dense: jax.Array | None,
+    parent_ids: jax.Array,     # int32 [n, b] GLOBAL chunk ids at this level
+    parent_scores: jax.Array,  # f32 [n, b]
+    chunk_start: jax.Array,    # scalar: partition's first global chunk
+    chunk_count: jax.Array,    # scalar: partition's real chunk count
+    *,
+    method: str,
+    score_mode: str,
+    qt: int = 8,
+) -> Tuple[jax.Array, jax.Array]:
+    """The :func:`level_combined` continuation API for partitioned slices.
+
+    Localizes a *global* beam onto a partition's sliced layer — rows whose
+    chunk falls in ``[chunk_start, chunk_start + chunk_count)`` are owned;
+    everything else parks on the phantom chunk (index ``chunk_count``, the
+    all-sentinel pad :meth:`XMRTree.extract` appends) and returns exactly
+    ``NEG_INF`` — then scores one level through the same arithmetic as the
+    in-tree traversal. Returns ``(combined [n, b, B], owned [n, b])``.
+
+    This is the single continuation point both scatter–gather sync modes go
+    through (``repro.index.planner``): the per-level exchange scores the
+    canonical global beam here, and the pipelined mode scores its
+    *speculative* local beam here — which is why a speculative row that
+    survives the global select is bitwise what the full tree computes.
+    ``chunk_start``/``chunk_count`` are meant to be traced so equal-shape
+    partitions share one compilation.
+    """
+    owned = (parent_ids >= chunk_start) & (parent_ids < chunk_start + chunk_count)
+    local_ids = jnp.where(owned, parent_ids - chunk_start, chunk_count)
+    local_scores = jnp.where(owned, parent_scores, NEG_INF)
+    combined = level_combined(
+        layer, branching, d, x_idx, x_val, x_dense,
+        local_ids.astype(jnp.int32), local_scores,
+        method=method, score_mode=score_mode, qt=qt,
+    )
+    return jnp.where(owned[..., None], combined, NEG_INF), owned
 
 
 @functools.partial(

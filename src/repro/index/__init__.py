@@ -8,30 +8,38 @@ scatter–gather query path — bitwise-identical to the unpartitioned tree in
 its default per-level sync mode. See ``src/repro/index/README.md``.
 """
 
+from repro.index.cache import HotBeamCache
 from repro.index.partition import (
     PartitionedIndex,
     PartitionInfo,
     PartitionManifest,
     default_split_level,
     partition_tree,
+    rebalance,
+    rebalance_bounds,
 )
 from repro.index.placement import Placement, assign_partitions, place
 from repro.index.planner import (
+    SYNC_MODES,
     ScatterGatherPlanner,
     merge_topk,
     reference_topk_width,
 )
 
 __all__ = [
+    "HotBeamCache",
     "PartitionInfo",
     "PartitionManifest",
     "PartitionedIndex",
     "Placement",
+    "SYNC_MODES",
     "ScatterGatherPlanner",
     "assign_partitions",
     "default_split_level",
     "merge_topk",
     "partition_tree",
     "place",
+    "rebalance",
+    "rebalance_bounds",
     "reference_topk_width",
 ]

@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
@@ -158,7 +158,11 @@ def default_split_level(tree: XMRTree, n_partitions: int) -> int:
 
 
 def partition_tree(
-    tree: XMRTree, n_partitions: int, *, level: int | None = None
+    tree: XMRTree,
+    n_partitions: int,
+    *,
+    level: int | None = None,
+    bounds: Sequence[int] | None = None,
 ) -> PartitionedIndex:
     """Split ``tree`` into a router head + ``n_partitions`` sub-trees.
 
@@ -166,7 +170,10 @@ def partition_tree(
     into contiguous, near-equal ranges — with a B-ary layout equal chunk
     counts are equal label counts, up to the global ragged tail which lands
     in the last partition (deliberately: the uneven-range edge case stays
-    exercised).
+    exercised). Pass explicit ``bounds`` (``n_partitions + 1`` strictly
+    increasing chunk boundaries covering ``[0, n_chunks]``) to cut uneven
+    ranges on purpose — :func:`rebalance` uses this to re-cut from observed
+    occupancy skew.
     """
     if n_partitions < 1:
         raise ValueError(f"n_partitions must be >= 1; got {n_partitions}")
@@ -178,7 +185,21 @@ def partition_tree(
             f"partitions={n_partitions} exceeds the {n_chunks} chunks of "
             f"level {level}"
         )
-    bounds = np.linspace(0, n_chunks, n_partitions + 1).round().astype(int)
+    if bounds is None:
+        bounds = np.linspace(0, n_chunks, n_partitions + 1).round().astype(int)
+    else:
+        bounds = np.asarray(list(bounds), dtype=int)
+        if (
+            len(bounds) != n_partitions + 1
+            or bounds[0] != 0
+            or bounds[-1] != n_chunks
+            or np.any(np.diff(bounds) < 1)
+        ):
+            raise ValueError(
+                f"bounds must be {n_partitions + 1} strictly increasing "
+                f"chunk boundaries covering [0, {n_chunks}]; got "
+                f"{bounds.tolist()}"
+            )
     leaf_span = int(np.prod(tree.branching[level:]))
 
     head = tree.head(level)
@@ -216,4 +237,66 @@ def partition_tree(
         manifest=manifest,
         n_cols=tree.n_cols,
         branching=tree.branching,
+    )
+
+
+def rebalance_bounds(
+    manifest: PartitionManifest, occupancy: Sequence[float]
+) -> List[int]:
+    """Re-cut split-level chunk boundaries from observed occupancy skew.
+
+    ``occupancy`` is the per-partition share of observed traffic under the
+    *current* cut — ``ServerMetrics.partition_occupancy`` (top-k result
+    share) or :meth:`~repro.index.cache.HotBeamCache.occupancy` (router-beam
+    share); both sum to ~1. Each chunk is assigned the uniform slice of its
+    current partition's observed weight (the finest granularity the signal
+    resolves), and the boundary ``k`` moves to the chunk whose weight prefix
+    is closest to ``k/P`` of the total — so a partition that served 2× its
+    share gives up chunks to its neighbours. Boundaries stay strictly
+    increasing (every partition keeps >= 1 chunk); the result feeds
+    ``partition_tree(tree, P, level=manifest.level, bounds=...)``.
+    """
+    P = manifest.n_partitions
+    occ = np.asarray(occupancy, dtype=np.float64)
+    if occ.shape != (P,):
+        raise ValueError(
+            f"occupancy must hold {P} shares; got shape {occ.shape}"
+        )
+    if np.any(occ < 0) or occ.sum() <= 0:
+        raise ValueError(f"occupancy shares must be >= 0 and sum > 0; got {occ}")
+    n_chunks = manifest.partitions[-1].chunk_end
+    weight = np.empty(n_chunks, dtype=np.float64)
+    for p, info in zip(occ, manifest.partitions):
+        width = info.chunk_end - info.chunk_start
+        weight[info.chunk_start:info.chunk_end] = p / width
+    prefix = np.concatenate([[0.0], np.cumsum(weight)])  # [n_chunks + 1]
+    bounds = [0]
+    for k in range(1, P):
+        target = prefix[-1] * k / P
+        cut = int(np.argmin(np.abs(prefix - target)))
+        # Strictly increasing, and leave room for the partitions after us.
+        cut = min(max(cut, bounds[-1] + 1), n_chunks - (P - k))
+        bounds.append(cut)
+    bounds.append(n_chunks)
+    return bounds
+
+
+def rebalance(
+    tree: XMRTree,
+    manifest: PartitionManifest,
+    occupancy: Sequence[float],
+) -> PartitionedIndex:
+    """Offline re-partition of ``tree`` from observed ``occupancy`` skew.
+
+    Returns a fresh :class:`PartitionedIndex` cut at the manifest's split
+    level with :func:`rebalance_bounds`' ranges. The new manifest keeps the
+    same schema ``version`` — rebalancing changes *content*, not format —
+    so per-partition ``content_hash`` values are the way a deployment tells
+    the cuts apart (see ``src/repro/index/README.md``).
+    """
+    return partition_tree(
+        tree,
+        manifest.n_partitions,
+        level=manifest.level,
+        bounds=rebalance_bounds(manifest, occupancy),
     )

@@ -75,12 +75,19 @@ def place(
     *,
     shards: int = 1,
     devices: Optional[Sequence[Any]] = None,
+    occupancy: Optional[Sequence[float]] = None,
 ) -> Placement:
     """Map ``index``'s partitions onto local devices.
 
     ``shards`` is the data-parallel width (PR 3's replica count); the model
     width is ``min(P, n_devices // shards)`` — as many columns as the device
     budget affords, never more than there are partitions.
+
+    By default columns are balanced by resident ``memory_bytes`` (capacity).
+    Pass observed per-partition ``occupancy`` shares (``ServerMetrics.
+    partition_occupancy`` or ``HotBeamCache.occupancy()``) to balance by
+    expected *load* instead — under the skewed traffic the hot-beam cache
+    exploits, memory-balanced columns can be compute-imbalanced.
     """
     devices = list(devices if devices is not None else jax.devices())
     if shards < 1:
@@ -92,18 +99,35 @@ def place(
         )
     n_model = max(1, min(index.n_partitions, len(devices) // shards))
     mesh = partition_mesh(shards, n_model, devices=devices)
-    mem = [p.memory_bytes for p in index.manifest.partitions]
-    assignments = assign_partitions(mem, n_model)
+    if occupancy is not None:
+        occ = np.asarray(occupancy, dtype=np.float64)
+        if occ.shape != (index.n_partitions,) or np.any(occ < 0):
+            raise ValueError(
+                f"occupancy must hold {index.n_partitions} non-negative "
+                f"shares; got {occupancy!r}"
+            )
+        # Integerize for the LPT packer; resolution of 1e-6 of total load.
+        load = [int(round(o * 1_000_000)) for o in occ]
+    else:
+        load = [p.memory_bytes for p in index.manifest.partitions]
+    assignments = assign_partitions(load, n_model)
     array_shardings, batch_shardings = [], []
     for col in assignments:
         col_devices = np.asarray(mesh.devices)[:, col]
         sub = Mesh(col_devices, ("data",))
         array_shardings.append(NamedSharding(sub, P()))
         batch_shardings.append(NamedSharding(sub, P("data")))
+    # Coordinator (route/merge/select steps): prefer a device OUTSIDE the
+    # mesh when the budget leaves one idle — a coordinator sharing a
+    # partition's device queues its per-level select behind that
+    # partition's matmul, serializing exactly the exchange the pipelined
+    # sync mode overlaps.
+    n_used = shards * n_model
+    coordinator = devices[n_used] if n_used < len(devices) else devices[0]
     return Placement(
         mesh=mesh,
         assignments=assignments,
         array_shardings=array_shardings,
         batch_shardings=batch_shardings,
-        coordinator=devices[0],
+        coordinator=coordinator,
     )

@@ -1,13 +1,13 @@
 """Scatter–gather query planner over a :class:`PartitionedIndex`.
 
-Query path (``sync="level"``, the default, **bitwise-exact**):
+Query path (``sync="level"``, **bitwise-exact**):
 
 1. **route** — the replicated router head runs the ordinary jitted beam
    search over the levels above the split, producing the global beam.
 2. **scatter** — the beam is broadcast to every partition; each partition
    scores *only the beam rows it owns* (out-of-range rows park on its
-   phantom chunk) through :func:`repro.core.tree.level_combined` — the same
-   arithmetic the unpartitioned traversal uses, on sliced layers with
+   phantom chunk) through :func:`repro.core.tree.owned_level_combined` — the
+   same arithmetic the unpartitioned traversal uses, on sliced layers with
    identical ELL pad widths, so owned rows are bit-identical.
 3. **gather + select** — the planner reassembles the global ``[n, b, B]``
    candidate tensor from the owners and applies the canonical
@@ -16,7 +16,40 @@ Query path (``sync="level"``, the default, **bitwise-exact**):
    top-k — results are **bitwise-identical** to the unpartitioned tree for
    every MSCM method (pinned by tests and a structural benchmark flag).
 
-Why per-level gathers: beam search prunes globally at every level. A
+``sync="pipelined"`` keeps the same bitwise contract while taking the
+per-level exchange off the partitions' critical path. In ``"level"`` mode a
+partition's level-(l+1) matmul cannot start until the coordinator has
+gathered every partition's level-l candidates, selected, and scattered the
+winning beam back — P devices idle behind one host-coordinated exchange
+every level. The pipelined mode **double-buffers the exchange with
+speculation**:
+
+* each partition runs a *local* canonical select over the candidates it
+  owns (:func:`_local_select` — same ``(score desc, id asc)`` order as the
+  global select, via an id-presorted ``top_k``) and speculatively expands
+  those survivors through the level-(l+1) MSCM **now**, through the same
+  ``owned_level_combined`` continuation;
+* canonical-order dominance guarantees every *globally* surviving
+  candidate is present in its owner's local beam (the owner's competitor
+  set is a subset of the global one, and unowned rows are junk-id-shifted
+  past every real candidate so they lose all ties) — so the coordinator
+  never needs the ``[n, b, B]`` candidate tensor at all: it **canonically
+  merges the P local beams** (:func:`_merge_beams`, ``[n, w]`` ids +
+  scores each) and that *is* the global select, bit for bit. Per-level
+  communication drops ~B× and the coordinator's sort shrinks from ``b·B``
+  wide to ``P·w``;
+* reconciliation (:func:`_reconcile_select`, fused with the next local
+  select) aligns the canonical winners with the speculative expansion — a
+  cheap per-row gather that drops speculative losers and re-pins
+  everything else to ``NEG_INF`` via the existing phantom machinery. No
+  recompute, no second matmul: a partition's heavy matmul for level l+1
+  depends on the merge of level **l−1**, not level l, so the exchange and
+  the next level's compute genuinely overlap (JAX async dispatch realizes
+  it as concurrent device streams). Results stay **bitwise-identical** to
+  ``sync="level"`` (pinned by ``tests/test_pipelined.py`` across
+  method × beam × qt × score_mode and the ``pipelined_parity`` flag).
+
+Why per-level gathers at all: beam search prunes globally at every level. A
 partition-local beam keeps candidates global pruning discarded, and their
 descendants can out-rank reference results at the leaves — a single final
 merge is a (weakly better, recall ≥) *different* ranking. That mode exists
@@ -32,13 +65,20 @@ candidates back, per level — while the weights stay put: with a
 device (column of the ``("data", "model")`` mesh), batches split over the
 data axis, and partitions score concurrently (JAX dispatch is async; the
 gather only synchronizes at the select).
+
+With ``cache_entries > 0`` a :class:`~repro.index.cache.HotBeamCache` maps
+router-beam signatures to the set of partitions that own any surviving row;
+partitions owning nothing are skipped for the whole batch (bitwise-safe —
+ownership is nested, so they could only ever contribute ``NEG_INF``). The
+lookup materializes the router beam on the host (one small sync per batch),
+which is why it is opt-in.
 """
 
 from __future__ import annotations
 
 import functools
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +86,8 @@ import numpy as np
 
 from repro.core import mscm as mscm_lib
 from repro.core.beam import NEG_INF, beam_select
-from repro.core.tree import level_combined
+from repro.core.tree import owned_level_combined
+from repro.index.cache import HotBeamCache
 from repro.index.partition import PartitionedIndex
 from repro.index.placement import Placement
 
@@ -66,43 +107,149 @@ def reference_topk_width(
     return b
 
 
-@functools.partial(
+_owned_level_scores = functools.partial(
     jax.jit,
     static_argnames=("branching", "d", "method", "score_mode", "qt"),
-)
-def _owned_level_scores(
-    layer,
-    x_idx: jax.Array,
-    x_val: jax.Array,
-    x_dense: Optional[jax.Array],
-    parent_ids: jax.Array,     # int32 [n, b] GLOBAL chunk ids at this level
-    parent_scores: jax.Array,  # f32 [n, b]
-    chunk_start: jax.Array,    # scalar: partition's first global chunk
-    chunk_count: jax.Array,    # scalar: partition's real chunk count
-    *,
-    branching: int,
-    d: int,
-    method: str,
-    score_mode: str,
-    qt: int,
-) -> Tuple[jax.Array, jax.Array]:
-    """One partition's owned slice of a level: ([n, b, B] combined, owned).
+)(owned_level_combined)
+"""Jitted :func:`repro.core.tree.owned_level_combined` — one partition's
+owned slice of a level: ``([n, b, B] combined, owned)``. ``chunk_start`` /
+``chunk_count`` are traced so equal-shape partitions share one
+compilation."""
 
-    Unowned rows park on the phantom chunk (index ``chunk_count`` — the
-    all-sentinel pad :meth:`XMRTree.extract` appends) and return exactly
-    ``NEG_INF``; owned rows are bitwise what the full tree computes for the
-    same (query, parent) pair. ``chunk_start``/``chunk_count`` are traced so
-    equal-shape partitions share one compilation.
+
+def _local_select(
+    parent_ids: jax.Array,  # int32 [n, b] GLOBAL chunk ids at this level
+    combined: jax.Array,    # f32 [n, b, B] this partition's owned candidates
+    owned: jax.Array,       # bool [n, b]
+    *,
+    n_cols: int,            # valid columns at this level
+    n_chunks: int,          # GLOBAL chunk count at this level (junk shift)
+    next_b: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Partition-local canonical select — the speculation step.
+
+    Identical ``(score desc, id asc)`` ordering to the coordinator's global
+    select, over the partition's own candidate slice. Unowned beam rows are
+    **id-shifted** onto the junk parent ``n_chunks`` (one past the last real
+    chunk anywhere in the tree) so their ``NEG_INF`` children carry ids
+    strictly greater than every real or padding candidate: they lose every
+    tie, which is what makes the speculative set a guaranteed superset of
+    the partition's globally-surviving candidates — even ones whose score
+    is exactly ``NEG_INF``.
+
+    Runs once per partition per level (vs the coordinator's one global
+    select), so it uses a cheaper kernel than ``beam_select``'s full
+    two-key sort: the beam is first ordered by parent id (an ``O(b)``-wide
+    argsort), which makes the flattened candidate ids ascending in index —
+    ``lax.top_k``'s lowest-index tie-break then *is* the canonical lowest-id
+    tie-break, at a fraction of the sort's cost. Returns the same bits as
+    ``beam_select`` in the same canonical order.
     """
-    owned = (parent_ids >= chunk_start) & (parent_ids < chunk_start + chunk_count)
-    local_ids = jnp.where(owned, parent_ids - chunk_start, chunk_count)
-    local_scores = jnp.where(owned, parent_scores, NEG_INF)
-    combined = level_combined(
-        layer, branching, d, x_idx, x_val, x_dense,
-        local_ids.astype(jnp.int32), local_scores,
-        method=method, score_mode=score_mode, qt=qt,
+    n, b = parent_ids.shape
+    B = combined.shape[-1]
+    shifted = jnp.where(owned, parent_ids, jnp.int32(n_chunks))
+    order = jnp.argsort(shifted, axis=1)
+    p_sorted = jnp.take_along_axis(shifted, order, axis=1)
+    c_sorted = jnp.take_along_axis(combined, order[..., None], axis=1)
+    child_ids = p_sorted[:, :, None] * B + jnp.arange(B)[None, None, :]
+    valid = child_ids < n_cols
+    scores = jnp.where(valid, c_sorted, NEG_INF).reshape(n, b * B)
+    k = min(next_b, b * B)  # the reference width clamp (slicing semantics)
+    top_scores, top_idx = jax.lax.top_k(scores, k)
+    top_ids = jnp.take_along_axis(
+        child_ids.reshape(n, b * B), top_idx, axis=1
     )
-    return jnp.where(owned[..., None], combined, NEG_INF), owned
+    return top_ids.astype(jnp.int32), top_scores
+
+
+_spec_select = functools.partial(
+    jax.jit, static_argnames=("n_cols", "n_chunks", "next_b")
+)(_local_select)
+
+
+def _reconcile(
+    winner_ids: jax.Array,   # int32 [n, w] canonical global beam (level l-1)
+    spec_ids: jax.Array,     # int32 [n, w] speculative local beam (level l-1)
+    spec_combined: jax.Array,  # f32 [n, w, B] speculative level-l candidates
+    chunk_start: jax.Array,  # scalar: partition's first chunk at level l
+    chunk_count: jax.Array,  # scalar: partition's real chunks at level l
+) -> Tuple[jax.Array, jax.Array]:
+    """Align the speculative expansion with the canonical global beam.
+
+    For each globally-selected parent, find it in the speculative beam (a
+    per-row ``searchsorted`` through the id-sorted speculative ids) and
+    gather its precomputed level-l candidate row. Winners owned by this
+    partition are guaranteed present (see :func:`_local_select`); everything
+    else — losers, rows owned elsewhere — re-pins to exactly ``NEG_INF``,
+    the same bits :func:`~repro.core.tree.owned_level_combined` would have
+    produced. Returns ``(combined [n, w, B], owned [n, w])`` in canonical
+    beam order, indistinguishable from the non-speculative path.
+    """
+    owned = (winner_ids >= chunk_start) & (winner_ids < chunk_start + chunk_count)
+    order = jnp.argsort(spec_ids, axis=1)
+    sorted_ids = jnp.take_along_axis(spec_ids, order, axis=1)
+    pos = jax.vmap(jnp.searchsorted)(sorted_ids, winner_ids)
+    pos = jnp.clip(pos, 0, spec_ids.shape[1] - 1)
+    hit = jnp.take_along_axis(sorted_ids, pos, axis=1) == winner_ids
+    src = jnp.take_along_axis(order, pos, axis=1)
+    combined = jnp.take_along_axis(spec_combined, src[..., None], axis=1)
+    mask = owned & hit
+    return jnp.where(mask[..., None], combined, NEG_INF), mask
+
+
+@functools.partial(jax.jit, static_argnames=("n_cols", "n_chunks", "next_b"))
+def _reconcile_select(
+    winner_ids: jax.Array,     # int32 [n, w] canonical beam from the merge
+    spec_ids: jax.Array,       # int32 [n, w] previous speculative beam
+    spec_combined: jax.Array,  # f32 [n, w, B] speculative this-level scores
+    chunk_start: jax.Array,
+    chunk_count: jax.Array,
+    *,
+    n_cols: int,
+    n_chunks: int,
+    next_b: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused reconcile + local select: one cheap dispatch per level.
+
+    Both steps are gathers/sorts over ``[n, w(, B)]`` tensors with the same
+    operands, so fusing them keeps the partition's per-level exchange to a
+    single small XLA program between the heavy speculative matmuls.
+    """
+    combined, owned = _reconcile(
+        winner_ids, spec_ids, spec_combined, chunk_start, chunk_count
+    )
+    return _local_select(
+        winner_ids, combined, owned,
+        n_cols=n_cols, n_chunks=n_chunks, next_b=next_b,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def _merge_beams(
+    ids: Tuple[jax.Array, ...],     # per partition: int32 [n, w]
+    scores: Tuple[jax.Array, ...],  # per partition: f32 [n, w]
+    *,
+    width: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Canonical merge of the partitions' speculative beams == global select.
+
+    Every candidate that survives the *global* canonical select is present
+    in its owner's speculative beam (:func:`_local_select` dominance), and
+    canonical ``(score desc, id asc)`` order is a total order — so the
+    top-``width`` of the concatenated local beams is exactly the
+    top-``width`` of the full candidate set, at P·w merge cost instead of a
+    b·B-wide sort, with only ``[n, w]`` beams ever crossing devices
+    (``width`` carries the unpartitioned traversal's ``min(next_b, b·B)``
+    clamp so degenerate narrow levels keep the reference output shape).
+    Delegates the tie-break-critical sort to :func:`merge_topk` so the
+    canonical ordering lives in exactly one place.
+    """
+    merged_scores, merged_ids = merge_topk(
+        jnp.concatenate(scores, axis=1),
+        jnp.concatenate(ids, axis=1),
+        width=width,
+    )
+    return merged_ids, merged_scores
 
 
 @functools.partial(jax.jit, static_argnames=("n_cols", "next_b"))
@@ -140,7 +287,7 @@ def merge_topk(
 
 _scatter_dense = jax.jit(mscm_lib.scatter_dense, static_argnums=2)
 
-SYNC_MODES = ("level", "final")
+SYNC_MODES = ("level", "pipelined", "final")
 
 
 class ScatterGatherPlanner:
@@ -164,6 +311,7 @@ class ScatterGatherPlanner:
         qt: int = 8,
         sync: str = "level",
         placement: Optional[Placement] = None,
+        cache_entries: int = 0,
     ) -> None:
         if sync not in SYNC_MODES:
             raise ValueError(f"sync={sync!r}; choose from {SYNC_MODES}")
@@ -190,6 +338,20 @@ class ScatterGatherPlanner:
             "mscm_dense", "mscm_pallas", "mscm_pallas_pregather",
             "mscm_pallas_grouped",
         )
+        self.cache: Optional[HotBeamCache] = None
+        if cache_entries:
+            if sync == "final":
+                # The final-merge path always traverses every partition
+                # (dropping one changes the merged candidate panel), so a
+                # cache would be built but never consulted — refuse rather
+                # than silently no-op.
+                raise ValueError(
+                    'cache_entries is only meaningful for the exact sync '
+                    'modes ("level"/"pipelined"), not sync="final"'
+                )
+            bounds = [p.chunk_start for p in index.manifest.partitions]
+            bounds.append(index.manifest.partitions[-1].chunk_end)
+            self.cache = HotBeamCache(cache_entries, bounds)
 
     # -- device hops --------------------------------------------------------
     def _to_partition(self, pid: int, *arrays):
@@ -212,15 +374,29 @@ class ScatterGatherPlanner:
             method=self.method, score_mode=self.score_mode, qt=self.qt,
         )
 
-    def _partition_inputs(self, x_idx, x_val):
+    def _active_partitions(self, parent_ids: jax.Array) -> List[int]:
+        """Partitions participating in this batch.
+
+        Without a cache: all of them, no host sync. With one: the cached
+        owner set of each row's router-beam signature — partitions owning
+        no surviving row are skipped for every level (ownership is nested),
+        which cannot change any bit of the gather (their slices are all
+        ``NEG_INF`` by construction).
+        """
+        if self.cache is None:
+            return list(range(self.index.n_partitions))
+        return self.cache.active_partitions(np.asarray(parent_ids))
+
+    def _partition_inputs(self, x_idx, x_val, active: Sequence[int]):
         """Per-partition (xi, xv, x_dense) resident on the partition's devices.
 
         The dense [n, d+1] query table is the expensive piece (d can be
         millions); partitions sharing a batch sharding — all of them when no
         placement is set, column-mates under LPT packing — share one copy.
         """
-        out, by_sharding = [], {}
-        for pid in range(self.index.n_partitions):
+        out: Dict[int, tuple] = {}
+        by_sharding: Dict = {}
+        for pid in active:
             key = (
                 self.placement.batch_shardings[pid]
                 if self.placement is not None else None
@@ -232,7 +408,7 @@ class ScatterGatherPlanner:
                     if self._needs_dense else None
                 )
                 by_sharding[key] = (xi_p, xv_p, xd_p)
-            out.append(by_sharding[key])
+            out[pid] = by_sharding[key]
         return out
 
     def infer(
@@ -242,12 +418,30 @@ class ScatterGatherPlanner:
         scores, parent_ids = self._route(x_idx, x_val)
         if self.sync == "final":
             return self._infer_final(x_idx, x_val, parent_ids, scores)
-        return self._infer_level(x_idx, x_val, parent_ids, scores)
+        active = self._active_partitions(parent_ids)
+        run = (
+            self._infer_pipelined if self.sync == "pipelined"
+            else self._infer_level
+        )
+        return run(x_idx, x_val, parent_ids, scores, active)
 
-    def _infer_level(self, x_idx, x_val, parent_ids, scores):
+    def _level_owned(self, li, pid, inputs, parent_ids, scores, span):
+        """One partition's owned candidate slice of level ``li`` (jitted)."""
         idx = self.index
-        inputs = self._partition_inputs(x_idx, x_val)
-        infos = idx.manifest.partitions
+        part, info = self.parts[pid], idx.manifest.partitions[pid]
+        lay = part.layers[li - idx.level]
+        c_real = lay.chunk_rows.shape[0] - 1  # minus phantom pad
+        xi_p, xv_p, xd_p = inputs[pid]
+        return _owned_level_scores(
+            lay, idx.branching[li], idx.d, xi_p, xv_p, xd_p,
+            parent_ids, scores,
+            jnp.int32(info.chunk_start * span), jnp.int32(c_real),
+            method=self.method, score_mode=self.score_mode, qt=self.qt,
+        )
+
+    def _infer_level(self, x_idx, x_val, parent_ids, scores, active):
+        idx = self.index
+        inputs = self._partition_inputs(x_idx, x_val, active)
         depth = len(idx.n_cols)
         for li in range(idx.level, depth):
             is_last = li == depth - 1
@@ -259,17 +453,10 @@ class ScatterGatherPlanner:
             # branching products of the levels in between (tree order).
             span = int(np.prod(idx.branching[idx.level:li], dtype=np.int64)) \
                 if li > idx.level else 1
-            for pid, (part, info) in enumerate(zip(self.parts, infos)):
-                lay = part.layers[li - idx.level]
-                c_real = lay.chunk_rows.shape[0] - 1  # minus phantom pad
+            for pid in active:
                 ids_p, sc_p = self._to_partition(pid, parent_ids, scores)
-                xi_p, xv_p, xd_p = inputs[pid]
-                comb_p, own_p = _owned_level_scores(
-                    lay, xi_p, xv_p, xd_p, ids_p, sc_p,
-                    jnp.int32(info.chunk_start * span), jnp.int32(c_real),
-                    branching=idx.branching[li], d=idx.d,
-                    method=self.method, score_mode=self.score_mode,
-                    qt=self.qt,
+                comb_p, own_p = self._level_owned(
+                    li, pid, inputs, ids_p, sc_p, span
                 )
                 comb_p, own_p = self._to_coordinator(comb_p, own_p)
                 combined.append(comb_p)
@@ -279,6 +466,99 @@ class ScatterGatherPlanner:
                 n_cols=idx.n_cols[li], next_b=next_b,
             )
         return scores, parent_ids
+
+    def _infer_pipelined(self, x_idx, x_val, parent_ids, scores, active):
+        """Double-buffered exchange: level-l select ∥ level-(l+1) matmul.
+
+        Each iteration, per partition and in device-stream order:
+
+        1. reconcile the previous level's winners against the speculative
+           expansion and run the *local* canonical select (one fused cheap
+           dispatch, :func:`_reconcile_select`) — at the first partitioned
+           level, score the scattered router handoff instead;
+        2. ship the tiny ``[n, w]`` speculative beam to the coordinator —
+           *before* any heavy work, so the merge is never queued behind the
+           matmul it is meant to overlap;
+        3. speculatively expand the local survivors through the next
+           level's MSCM (the heavy matmul — depends only on partition-local
+           data, so it runs concurrently with the coordinator's merge);
+
+        then on the coordinator: 4. canonically merge the local beams
+        (:func:`_merge_beams` — bitwise the global select, because every
+        global winner is in its owner's local beam) and scatter the winner
+        ids (ids only — ``[n, w]`` int32) back to the partitions for the
+        next iteration's reconcile. All dispatch is async — the host never
+        blocks, and a partition's level-(l+1) matmul transitively depends
+        on the *level-(l-1)* merge, not the level-l one: one full level of
+        slack for the exchange to hide in.
+
+        Versus ``sync="level"``, per-level communication drops from the
+        full ``[n, b, B]`` candidate tensor + ownership mask per partition
+        to two ``[n, w]`` beams, and the coordinator's sort shrinks from
+        ``b·B`` wide to ``P·w``.
+        """
+        idx = self.index
+        infos = idx.manifest.partitions
+        inputs = self._partition_inputs(x_idx, x_val, active)
+        depth = len(idx.n_cols)
+        li0 = idx.level
+        beam_p: Dict[int, Tuple[jax.Array, jax.Array]] = {}
+        spec_comb: Dict[int, jax.Array] = {}
+        spec_ids: Dict[int, jax.Array] = {}
+        w_ids = parent_ids
+        width = parent_ids.shape[1]  # router handoff beam width
+        span = span_next = 1
+        for li in range(li0, depth):
+            is_last = li == depth - 1
+            next_b = min(self.topk if is_last else self.beam, idx.n_cols[li])
+            width = min(next_b, width * idx.branching[li])
+            # (1) local canonical beams for level li.
+            if li == li0:
+                for pid in active:  # scored from the router handoff
+                    ids, sc = self._to_partition(pid, parent_ids, scores)
+                    comb, own = self._level_owned(li0, pid, inputs, ids, sc, 1)
+                    beam_p[pid] = _spec_select(
+                        ids, comb, own,
+                        n_cols=idx.n_cols[li], n_chunks=idx.n_cols[li - 1],
+                        next_b=next_b,
+                    )
+            else:
+                for pid in active:
+                    info = infos[pid]
+                    lay = self.parts[pid].layers[li - li0]
+                    (ids,) = self._to_partition(pid, w_ids)
+                    beam_p[pid] = _reconcile_select(
+                        ids, spec_ids[pid], spec_comb[pid],
+                        jnp.int32(info.chunk_start * span),
+                        jnp.int32(lay.chunk_rows.shape[0] - 1),
+                        n_cols=idx.n_cols[li], n_chunks=idx.n_cols[li - 1],
+                        next_b=next_b,
+                    )
+            # (2) beam transfers to the coordinator go ahead of the matmul.
+            gathered = [
+                self._to_coordinator(*beam_p[pid]) for pid in active
+            ]
+            # (3) canonical merge == the global select for level li —
+            # dispatched BEFORE the expansions so that when the coordinator
+            # shares a device with a partition, the merge is not queued
+            # behind that partition's matmul (it depends only on the tiny
+            # beams transferred above).
+            w_ids, w_scores = _merge_beams(
+                tuple(i for i, _ in gathered),
+                tuple(s for _, s in gathered),
+                width=width,
+            )
+            # (4) speculative expansion of level li+1 — the double buffer.
+            if not is_last:
+                span_next = span * idx.branching[li]
+                for pid in active:
+                    s_ids, s_sc = beam_p[pid]
+                    spec_comb[pid], _ = self._level_owned(
+                        li + 1, pid, inputs, s_ids, s_sc, span_next
+                    )
+                    spec_ids[pid] = s_ids
+            span = span_next
+        return w_scores, w_ids
 
     def _run_partition(self, part, info, ids_p, sc_p, xi_p, xv_p):
         """One partition's whole-sub-tree traversal from the router beam.
@@ -307,7 +587,9 @@ class ScatterGatherPlanner:
         result (every merged score >= its exact counterpart, recall >=).
         """
         idx = self.index
-        inputs = self._partition_inputs(x_idx, x_val)
+        inputs = self._partition_inputs(
+            x_idx, x_val, range(idx.n_partitions)
+        )
         width = reference_topk_width(
             idx.n_cols, idx.branching, self.beam, self.topk
         )
@@ -339,6 +621,10 @@ class ScatterGatherPlanner:
         return merge_topk(s_cat, l_cat, width=width)
 
     # -- diagnostics --------------------------------------------------------
+    def cache_stats(self) -> Optional[dict]:
+        """Hot-beam cache accounting, or None when the cache is off."""
+        return self.cache.stats() if self.cache is not None else None
+
     def profile(
         self, x_idx: jax.Array, x_val: jax.Array
     ) -> List[float]:

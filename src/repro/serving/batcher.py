@@ -383,8 +383,14 @@ class MicroBatcher:
             return None
 
     def _finalize(self, inflight: _InFlight) -> None:
+        # For partitioned dispatch, the blocked wall below is the pipeline
+        # stall: host dispatch already returned, so everything the worker
+        # waits on here is device time the scatter-gather exchange failed
+        # to overlap (the figure sync="pipelined" exists to shrink).
+        t_wait = time.perf_counter()
         jax.block_until_ready((inflight.scores, inflight.labels))
         t_done = time.perf_counter()
+        partitioned = self.engine.planner is not None
         s = np.asarray(inflight.scores)
         leaves = np.asarray(inflight.labels)
         l = self.engine._map_labels(leaves)
@@ -401,6 +407,8 @@ class MicroBatcher:
             trigger=inflight.trigger,
             shards=self.engine.config.shards,
             partition_hits=hits,
+            stall_ms=1e3 * (t_done - t_wait) if partitioned else None,
+            cache_stats=self.engine.beam_cache_stats(),
         )
 
     def _fail(self, reqs: List[_Request], exc: BaseException) -> None:

@@ -29,8 +29,12 @@ Partitioned dispatch (``ServeConfig(partitions=P)``): the tree is split into
 P label-contiguous sub-trees over a ``("data", "model")`` mesh
 (:mod:`repro.index`) and every dispatch runs the scatter-gather planner —
 per-device model bytes shrink ~1/P while results stay bitwise-identical in
-the default ``partition_sync="level"`` mode. Composes with ``shards=N``:
-model-parallel partitions x data-parallel replicas behind one batcher.
+the ``partition_sync="level"`` (default) and ``"pipelined"`` modes;
+``"pipelined"`` overlaps each level's beam exchange with the next level's
+MSCM matmul via speculative expansion, and ``beam_cache=N`` adds the
+hot-beam LRU that skips partitions owning no surviving router-beam row.
+Composes with ``shards=N``: model-parallel partitions x data-parallel
+replicas behind one batcher.
 """
 
 from __future__ import annotations
@@ -62,7 +66,13 @@ class ServeConfig:
     # -- label-partitioned dispatch (repro.index) ---------------------------
     partitions: int = 1           # label-space partitions (model parallelism)
     partition_level: Optional[int] = None  # split level (None = auto)
-    partition_sync: str = "level"  # "level" (bitwise-exact) | "final"
+    # "level"     — per-level exchange, bitwise-exact
+    # "pipelined" — per-level exchange overlapped with the next level's
+    #               MSCM via speculative expansion; still bitwise-exact
+    # "final"     — one merge, no per-level sync; dominates, not bitwise
+    partition_sync: str = "level"
+    beam_cache: int = 0           # hot-beam LRU entries (0 = off; syncs the
+                                  # router beam to host once per dispatch)
     # -- overload policy (consumed by MicroBatcher) -------------------------
     queue_depth: Union[int, str, None] = None  # bound | "auto" | unbounded
     shed_policy: str = "reject"         # "reject" | "shed-oldest"
@@ -135,6 +145,7 @@ class XMRServingEngine:
                 qt=c.qt,
                 sync=c.partition_sync,
                 placement=self.placement,
+                cache_entries=c.beam_cache,
             )
             self.mesh = self.placement.mesh
         elif shards > 1:
@@ -278,6 +289,12 @@ class XMRServingEngine:
         if self.planner is None:
             return None
         return self.planner.hit_counts(leaves)
+
+    def beam_cache_stats(self) -> Optional[dict]:
+        """Cumulative hot-beam cache accounting (None when off/unpartitioned)."""
+        if self.planner is None:
+            return None
+        return self.planner.cache_stats()
 
     def measure_batch_seconds(self, batch: int, iters: int = 3) -> float:
         """Median wall seconds for one ``batch``-sized dispatch (warmed).

@@ -12,6 +12,13 @@ request decomposes into queue-wait (enqueue → batch formed) and compute
 coalescing diagnostics (size vs deadline trigger, bucket occupancy),
 overload accounting (shed rate, deadline-miss rate), and — when dispatch is
 sharded over a device mesh — per-replica occupancy.
+
+Partitioned dispatch adds overlap accounting: ``pipeline_stall_ms`` is the
+wall time the worker spent *blocked* on a dispatched batch's device results
+after host dispatch returned — the residual the pipelined scatter–gather
+mode exists to shrink (compare it across ``partition_sync="level"`` vs
+``"pipelined"`` under the same load) — and ``beam_cache`` carries the
+hot-beam LRU's cumulative hit/miss accounting from the planner.
 """
 
 from __future__ import annotations
@@ -104,6 +111,8 @@ class ServerMetrics:
     triggers: List[str] = dataclasses.field(default_factory=list)
     batch_shards: List[int] = dataclasses.field(default_factory=list)
     partition_hits: List[np.ndarray] = dataclasses.field(default_factory=list)
+    pipeline_stall_ms: List[float] = dataclasses.field(default_factory=list)
+    beam_cache: Dict[str, float] = dataclasses.field(default_factory=dict)
     offered: int = 0
     shed: int = 0
     shed_by_priority: Dict[int, int] = dataclasses.field(default_factory=dict)
@@ -141,16 +150,25 @@ class ServerMetrics:
         trigger: str,
         shards: int = 1,
         partition_hits=None,
+        stall_ms: float | None = None,
+        cache_stats: dict | None = None,
     ) -> None:
         """Record one dispatched micro-batch of len(t_enqueue) requests.
 
         ``partition_hits`` (per-partition result counts from the engine's
-        label-partitioned planner) feeds the partition-occupancy panel.
+        label-partitioned planner) feeds the partition-occupancy panel;
+        ``stall_ms`` is the worker's blocked-on-device wall for this batch
+        (partitioned dispatch only) and ``cache_stats`` the planner's
+        *cumulative* hot-beam cache counters (latest snapshot wins).
         """
         compute = 1e3 * (t_done - t_dequeue)
         with self._lock:
             if partition_hits is not None:
                 self.partition_hits.append(np.asarray(partition_hits))
+            if stall_ms is not None:
+                self.pipeline_stall_ms.append(stall_ms)
+            if cache_stats is not None:
+                self.beam_cache = dict(cache_stats)
             for te in t_enqueue:
                 self.queue_wait_ms.append(1e3 * (t_dequeue - te))
                 self.e2e_ms.append(1e3 * (t_done - te))
@@ -223,6 +241,12 @@ class ServerMetrics:
                 out["partition_occupancy"] = [
                     round(float(h / total), 4) for h in hits
                 ]
+            if self.pipeline_stall_ms:
+                stall = np.asarray(self.pipeline_stall_ms)
+                out["pipeline_stall_avg_ms"] = float(stall.mean())
+                out["pipeline_stall_p99_ms"] = float(np.percentile(stall, 99))
+            if self.beam_cache:
+                out["beam_cache"] = dict(self.beam_cache)
             max_shards = max(self.batch_shards, default=1)
             if max_shards > 1:
                 occ = np.zeros(max_shards)

@@ -1,0 +1,127 @@
+"""The benchmark regression gate: completed manifest, trend mode, trajectory.
+
+Pins the ISSUE 5 CI satellites at the unit level: a partial benchmark
+artifact must never pass vacuously, structural flags gate in every mode,
+trend mode warns (not gates) on run-over-run timing drift, and the
+trajectory appender emits one well-formed JSONL row per run.
+"""
+
+import json
+
+import pytest
+
+from benchmarks import check_regression as cr
+
+
+def _doc(rows, completed=True, **extra):
+    doc = {"rows": rows, "completed": completed}
+    doc.update(extra)
+    return doc
+
+
+def _row(name, us, derived=""):
+    return {"name": name, "us_per_call": us, "derived": derived}
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_incomplete_artifact_fails(tmp_path):
+    cur = _write(tmp_path, "cur.json", _doc([_row("a", 1.0)], completed=False,
+                                            failures=["serving: boom"]))
+    assert cr.main([cur, "--baseline", str(tmp_path / "none.json")]) == 1
+
+
+def test_missing_completed_key_fails(tmp_path):
+    cur = _write(tmp_path, "cur.json", {"rows": [_row("a", 1.0)]})
+    assert cr.main([cur, "--baseline", str(tmp_path / "none.json")]) == 1
+
+
+def test_completed_artifact_passes(tmp_path):
+    cur = _write(tmp_path, "cur.json",
+                 _doc([_row("a", 1.0, "pipelined_parity=True")]))
+    assert cr.main([cur, "--baseline", str(tmp_path / "none.json")]) == 0
+
+
+@pytest.mark.parametrize("flag", [
+    "pipelined_parity", "overlap_speedup", "cache_parity",
+    "partition_parity", "bitwise_identical",
+])
+def test_structural_flag_gates_every_mode(tmp_path, flag):
+    cur = _write(tmp_path, "cur.json", _doc([_row("a", 1.0, f"{flag}=False")]))
+    prev = _write(tmp_path, "prev.json", _doc([_row("a", 1.0)]))
+    # Baseline mode, missing-baseline mode, and trend mode all gate.
+    assert cr.main([cur, "--baseline", prev]) == 1
+    assert cr.main([cur, "--baseline", str(tmp_path / "none.json")]) == 1
+    assert cr.main([cur, "--trend", prev]) == 1
+
+
+def test_trend_mode_warns_but_does_not_gate_timing(tmp_path, capsys):
+    cur = _write(tmp_path, "cur.json", _doc([_row("a", 10.0)]))
+    prev = _write(tmp_path, "prev.json", _doc([_row("a", 1.0)]))
+    assert cr.main([cur, "--trend", prev]) == 0  # 10x drift: warn only
+    out = capsys.readouterr().out
+    assert "SLOWER" in out and "warning only" in out
+
+
+def test_trend_mode_reports_but_does_not_gate_missing_rows(tmp_path, capsys):
+    """A renamed/retired structural row only fails against the *committed*
+    baseline (which the PR regenerates), never against the previous run's
+    artifact — otherwise the rename could not land at all."""
+    cur = _write(tmp_path, "cur.json", _doc([_row("new-name", 1.0)]))
+    prev = _write(tmp_path, "prev.json",
+                  _doc([_row("old-name", 1.0, "partition_parity=True")]))
+    assert cr.main([cur, "--trend", prev]) == 0
+    assert "MISSING STRUCTURAL ROW" in capsys.readouterr().out
+
+
+def test_trend_mode_counter_drift_warns_only(tmp_path, capsys):
+    """Counter growth gates against the committed baseline (which a PR can
+    regenerate) but only warns against the previous run's artifact."""
+    cur = _write(tmp_path, "cur.json", _doc([_row("grouped_tiles", 20.0)]))
+    prev = _write(tmp_path, "prev.json", _doc([_row("grouped_tiles", 10.0)]))
+    assert cr.main([cur, "--trend", prev]) == 0
+    assert "COUNTER REGRESSION" in capsys.readouterr().out
+    assert cr.main([cur, "--baseline", prev]) == 1  # committed-baseline gate
+
+
+def test_trend_mode_missing_previous_soft_skips(tmp_path, capsys):
+    cur = _write(tmp_path, "cur.json", _doc([_row("a", 1.0)]))
+    assert cr.main([cur, "--trend", str(tmp_path / "gone.json")]) == 0
+    assert "skipped" in capsys.readouterr().out
+
+
+def test_baseline_timing_gate_still_strict_only(tmp_path):
+    cur = _write(tmp_path, "cur.json", _doc([_row("a", 10.0)]))
+    base = _write(tmp_path, "base.json", _doc([_row("a", 1.0)]))
+    assert cr.main([cur, "--baseline", base]) == 0
+    assert cr.main([cur, "--baseline", base, "--strict"]) == 1
+
+
+def test_missing_structural_row_fails(tmp_path):
+    cur = _write(tmp_path, "cur.json", _doc([_row("a", 1.0)]))
+    base = _write(tmp_path, "base.json",
+                  _doc([_row("a", 1.0),
+                        _row("b", 1.0, "partition_parity=True")]))
+    assert cr.main([cur, "--baseline", base]) == 1
+
+
+def test_trajectory_append(tmp_path, monkeypatch):
+    monkeypatch.setenv("GITHUB_SHA", "abc123")
+    monkeypatch.setenv("GITHUB_RUN_ID", "42")
+    cur = _write(tmp_path, "cur.json",
+                 _doc([_row("a", 1.5)], wall_s=12.5))
+    traj = tmp_path / "BENCH_trajectory.jsonl"
+    assert cr.main([cur, "--baseline", str(tmp_path / "none.json"),
+                    "--append-trajectory", str(traj)]) == 0
+    assert cr.main([cur, "--baseline", str(tmp_path / "none.json"),
+                    "--append-trajectory", str(traj)]) == 0
+    lines = traj.read_text().strip().splitlines()
+    assert len(lines) == 2  # one row per run, appended
+    row = json.loads(lines[0])
+    assert row["sha"] == "abc123" and row["run_id"] == "42"
+    assert row["completed"] is True and row["wall_s"] == 12.5
+    assert row["rows"] == {"a": 1.5}

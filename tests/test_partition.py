@@ -20,6 +20,8 @@ from repro.index import (
     default_split_level,
     partition_tree,
     place,
+    rebalance,
+    rebalance_bounds,
     reference_topk_width,
 )
 from repro.sparse import random_sparse_csc, random_sparse_csr
@@ -272,3 +274,77 @@ def test_place_single_device(tree_and_queries):
     )
     pl = ScatterGatherPlanner(idx, beam=6, topk=5, placement=pm)
     _assert_bitwise(pl, tree, xi, xv, 6, 5, "mscm_dense", "prod")
+
+
+def test_place_occupancy_weighting(tree_and_queries):
+    """Observed load shares (not memory) drive the packing when given."""
+    tree, *_ = tree_and_queries
+    idx = partition_tree(tree, 4)
+    # Device-free pin of the LPT-by-load behavior (CI has one device, so
+    # n_model == 1 and the placement itself degenerates): a partition
+    # serving ~everything must sit alone on a column while the cold ones
+    # share the other — memory packing (near-equal bytes) would pair it.
+    load = [int(o * 1e6) for o in (0.94, 0.02, 0.02, 0.02)]
+    cols = assign_partitions(load, 2)
+    assert cols.count(cols[0]) == 1
+    mem_cols = assign_partitions(
+        [p.memory_bytes for p in idx.manifest.partitions], 2
+    )
+    assert mem_cols.count(mem_cols[0]) == 2  # bytes packing pairs them
+    pm = place(idx, shards=1, occupancy=[0.94, 0.02, 0.02, 0.02])
+    if pm.n_model == 2:  # full path needs >= 2 local devices
+        assert pm.assignments.count(pm.assignments[0]) == 1
+    with pytest.raises(ValueError):
+        place(idx, occupancy=[0.5, 0.5])  # wrong arity
+    with pytest.raises(ValueError):
+        place(idx, occupancy=[-1.0, 1.0, 0.5, 0.5])
+
+
+# ---------------------------------------------------------------------------
+# 6. rebalance from observed occupancy skew
+# ---------------------------------------------------------------------------
+
+def test_rebalance_bounds_uniform_is_stable(tree_and_queries):
+    """Uniform observed load keeps the even cut."""
+    tree, *_ = tree_and_queries
+    m = partition_tree(tree, 4).manifest
+    assert rebalance_bounds(m, [0.25, 0.25, 0.25, 0.25]) == [0, 2, 4, 6, 8]
+
+
+def test_rebalance_shrinks_hot_partition(tree_and_queries):
+    """A partition serving 2x its share gives chunks to its neighbours."""
+    tree, *_ = tree_and_queries
+    m = partition_tree(tree, 4).manifest  # even cut: 2 chunks each
+    bounds = rebalance_bounds(m, [0.70, 0.10, 0.10, 0.10])
+    assert bounds[0] == 0 and bounds[-1] == 8
+    assert all(b < a for b, a in zip(bounds, bounds[1:]))
+    # The hot partition's new range is narrower than its old 2 chunks.
+    assert bounds[1] - bounds[0] < 2
+
+
+def test_rebalance_roundtrip_stays_bitwise(tree_and_queries):
+    """Re-cutting from skew changes ranges, not results."""
+    tree, xi, xv = tree_and_queries
+    idx = partition_tree(tree, 4)
+    idx2 = rebalance(tree, idx.manifest, [0.55, 0.15, 0.15, 0.15])
+    sizes = [p.chunk_end - p.chunk_start for p in idx2.manifest.partitions]
+    assert sizes != [2, 2, 2, 2]  # the cut actually moved
+    assert idx2.manifest.partitions[-1].label_end == tree.n_labels
+    for sync in ("level", "pipelined"):
+        pl = ScatterGatherPlanner(idx2, beam=10, topk=5, sync=sync)
+        _assert_bitwise(pl, tree, xi, xv, 10, 5, "mscm_dense", "prod")
+
+
+def test_rebalance_validation(tree_and_queries):
+    tree, *_ = tree_and_queries
+    m = partition_tree(tree, 4).manifest
+    with pytest.raises(ValueError):
+        rebalance_bounds(m, [0.5, 0.5])          # wrong arity
+    with pytest.raises(ValueError):
+        rebalance_bounds(m, [0.0, 0.0, 0.0, 0.0])  # zero total
+    with pytest.raises(ValueError):
+        partition_tree(tree, 4, bounds=[0, 1, 2, 8])        # wrong length
+    with pytest.raises(ValueError):
+        partition_tree(tree, 4, bounds=[0, 3, 3, 5, 8])     # not increasing
+    with pytest.raises(ValueError):
+        partition_tree(tree, 4, bounds=[1, 3, 5, 7, 8])     # not covering
