@@ -1,0 +1,234 @@
+"""HTTP gateway over the cross-process partition fleet (ISSUE 6).
+
+Measures the network edge end to end: real worker subprocesses (P=2,
+``partition_sync="pipelined"``) exchanging beams over the socket RPC, a
+MicroBatcher coalescing, and the stdlib HTTP gateway in front. Two rows on
+the CI-size tree:
+
+* ``gateway-closed`` — closed loop: a small thread pool of HTTP clients
+  keeps all queries in flight; wall -> QPS. The derived field carries
+  ``gateway_parity`` — every score/id served over HTTP is **bitwise**
+  identical to the in-process unpartitioned engine (the house exactness
+  contract across JSON, the socket RPC, and the process boundary) — which
+  ``benchmarks/check_regression.py`` gates hard.
+* ``gateway-poisson`` — open loop: Poisson arrivals at ~2x the closed-loop
+  rate against a bounded admission queue, reporting the HTTP status mix
+  (200/429/504) the edge actually answered with.
+
+Run: ``python -m benchmarks.bench_gateway [--n 64] [--partitions 2]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import build_benchmark_tree, csv_line
+from repro.data.xmr_data import PAPER_SHAPES, benchmark_queries, scaled_shape
+from repro.serving import (
+    AdmissionConfig,
+    BatchPolicy,
+    MicroBatcher,
+    PartitionConfig,
+    Query,
+    ServeConfig,
+    ServingGateway,
+    XMRServingEngine,
+)
+from repro.serving.fleet import PartitionFleet
+
+
+def _post(url: str, doc: dict, timeout: float = 300.0):
+    req = urllib.request.Request(
+        url + "/v1/query", data=json.dumps(doc).encode(),
+        headers={"Content-Type": "application/json"},
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.load(resp)
+    except urllib.error.HTTPError as err:
+        return err.code, json.load(err)
+
+
+def _drive_closed(url: str, queries, n: int, workers: int = 4):
+    """All queries in flight across a small client pool; returns
+    (wall seconds, results indexed by qid, status counts)."""
+    results = [None] * n
+    counts: dict = {}
+    lock = threading.Lock()
+    it = iter(range(n))
+
+    def client():
+        while True:
+            with lock:
+                i = next(it, None)
+            if i is None:
+                return
+            idx, val = queries.row(i % queries.shape[0])
+            code, doc = _post(url, Query(idx=idx, val=val, qid=i).to_wire())
+            with lock:
+                counts[code] = counts.get(code, 0) + 1
+                results[i] = (code, doc)
+
+    threads = [threading.Thread(target=client) for _ in range(workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0, results, counts
+
+
+def _drive_poisson(url: str, queries, n: int, rate: float,
+                   rng: np.random.Generator):
+    """Open-loop Poisson arrivals, one daemon thread per request (the HTTP
+    client blocks, the offered rate must not); returns status counts."""
+    counts: dict = {}
+    lock = threading.Lock()
+
+    def fire(i):
+        idx, val = queries.row(i % queries.shape[0])
+        code, _ = _post(url, Query(idx=idx, val=val, qid=i).to_wire())
+        with lock:
+            counts[code] = counts.get(code, 0) + 1
+
+    threads = []
+    t_next = time.perf_counter()
+    for i, gap in enumerate(rng.exponential(1.0 / rate, size=n)):
+        t_next += gap
+        lag = t_next - time.perf_counter()
+        if lag > 1e-3:
+            time.sleep(lag - 5e-4)
+        while time.perf_counter() < t_next:
+            pass
+        t = threading.Thread(target=fire, args=(i,), daemon=True)
+        t.start()
+        threads.append(t)
+    for t in threads:
+        t.join(timeout=300)
+    return counts
+
+
+def run(
+    *,
+    n_queries: int = 64,
+    partitions: int = 2,
+    max_batch: int = 8,
+    max_wait_ms: float = 2.0,
+    max_labels: int = 4096,
+    seed: int = 0,
+) -> List[str]:
+    shape = PAPER_SHAPES["eurlex-4k"]
+    if shape.L > max_labels:
+        shape = scaled_shape(shape, max_labels / shape.L)
+    rng = np.random.default_rng(seed)
+    tree = build_benchmark_tree(shape, 16, rng)
+    queries = benchmark_queries(shape, n_queries, rng)
+
+    # In-process unpartitioned reference: the bitwise anchor.
+    ref_engine = XMRServingEngine(
+        tree, ServeConfig(ell_width=256, max_batch=max(64, max_batch)))
+    ref_s, ref_l = ref_engine.serve_batch(queries)
+
+    engine = XMRServingEngine(
+        tree,
+        ServeConfig(
+            ell_width=256, max_batch=max(64, max_batch),
+            admission=AdmissionConfig(queue_depth=4 * max_batch,
+                                      shed_policy="reject"),
+            partition=PartitionConfig(partitions=partitions,
+                                      partition_sync="pipelined"),
+        ),
+    )
+    lines = []
+    with PartitionFleet.launch(partitions, rpc_timeout_s=300.0) as fleet:
+        fleet.attach(engine)
+        with MicroBatcher(engine, BatchPolicy(max_batch, max_wait_ms)) as mb, \
+                ServingGateway(mb, fleet=fleet) as gw:
+            # warm the HTTP + fleet path outside the timed window
+            idx, val = queries.row(0)
+            _post(gw.url, Query(idx=idx, val=val, qid=-1).to_wire())
+
+            wall, results, counts = _drive_closed(gw.url, queries, n_queries)
+            parity = counts.get(200, 0) == n_queries
+            for i, (code, doc) in enumerate(results):
+                if code != 200:
+                    parity = False
+                    continue
+                j = i % queries.shape[0]
+                got_s = np.asarray(doc["scores"], np.float32)
+                got_l = np.asarray(doc["ids"], np.int32)
+                parity = parity and bool(
+                    np.array_equal(got_l, ref_l[j])
+                    and np.array_equal(got_s.view(np.uint32),
+                                       ref_s[j].view(np.uint32))
+                )
+            closed_qps = n_queries / wall
+            lines.append(
+                csv_line(
+                    f"{shape.name}/gateway/gateway-closed",
+                    1e6 * wall / n_queries,
+                    f"qps={closed_qps:.1f} partitions={partitions} "
+                    f"gateway_parity={parity} http_200={counts.get(200, 0)}",
+                )
+            )
+
+            # Open loop at ~2x the closed-loop rate: the bounded queue may
+            # shed (429) — report the status mix the edge answered with.
+            pois = _drive_poisson(gw.url, queries, n_queries,
+                                  2.0 * closed_qps, rng)
+            served = pois.get(200, 0)
+            lines.append(
+                csv_line(
+                    f"{shape.name}/gateway/gateway-poisson",
+                    1e6 * wall / n_queries,  # closed-loop anchor for scale
+                    f"rate={2.0 * closed_qps:.0f}qps http_200={served} "
+                    f"http_429={pois.get(429, 0)} "
+                    f"http_504={pois.get(504, 0)} "
+                    f"served_frac={served / n_queries:.2f}",
+                )
+            )
+    return lines
+
+
+def main(argv=None) -> List[str]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=64)
+    ap.add_argument("--partitions", type=int, default=2)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--max-labels", type=int, default=4096)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON artifact")
+    args = ap.parse_args(argv)
+    lines = run(
+        n_queries=args.n,
+        partitions=args.partitions,
+        max_batch=args.max_batch,
+        max_wait_ms=args.max_wait_ms,
+        max_labels=args.max_labels,
+    )
+    for line in lines:
+        print(line)
+    if args.json:
+        import sys as sys_mod
+
+        from benchmarks.run import _parse_rows
+
+        with open(args.json, "w") as f:
+            json.dump(
+                {"rows": _parse_rows(lines), "completed": True}, f, indent=2
+            )
+        print(f"# wrote {args.json}", file=sys_mod.stderr)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

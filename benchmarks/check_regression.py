@@ -57,6 +57,7 @@ STRUCT_FLAGS = (
     "pipelined_parity",            # overlapped sync == level sync, bitwise
     "overlap_speedup",             # pipelined >= level throughput, multidevice
     "cache_parity",                # hot-beam cache hit == cold run, bitwise
+    "gateway_parity",              # HTTP + fleet RPC == in-process, bitwise
 )
 
 

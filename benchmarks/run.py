@@ -51,9 +51,9 @@ def main() -> int:
                     help="also write rows as a JSON artifact")
     args = ap.parse_args()
 
-    from benchmarks import (bench_enterprise, bench_mscm, bench_napkin,
-                            bench_parallel, bench_partitioned, bench_serving,
-                            bench_xmr_head)
+    from benchmarks import (bench_enterprise, bench_gateway, bench_mscm,
+                            bench_napkin, bench_parallel, bench_partitioned,
+                            bench_serving, bench_xmr_head)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -110,6 +110,11 @@ def main() -> int:
     # and hot-beam cache (ISSUE 5): bitwise parity per method x sync mode,
     # memory shrink and cache flags gate via check_regression.
     emit("partitioned", bench_partitioned.run,
+         n_queries=32 if not args.full else 128)
+    # Cross-process fleet behind the HTTP gateway (ISSUE 6): real worker
+    # subprocesses + socket RPC + JSON edge — the gateway_parity structural
+    # flag (bitwise vs in-process) gates via check_regression.
+    emit("gateway", bench_gateway.run,
          n_queries=32 if not args.full else 128)
     emit("xmr_head", bench_xmr_head.run)
     if not args.skip_enterprise:

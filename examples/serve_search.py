@@ -9,22 +9,40 @@ production settings:
   panel per masked-matmul method;
 * **online** — a Poisson request stream through the async
   :class:`~repro.serving.MicroBatcher`, reporting queue-wait vs compute
-  split and throughput alongside the blocking per-query baseline.
+  split and throughput alongside the blocking per-query baseline;
+* **network** — ``--gateway PORT`` serves the model over HTTP (stdlib
+  :class:`~repro.serving.ServingGateway`); with ``--partitions P`` the
+  engine runs against a cross-process worker fleet exchanging beams over
+  the socket RPC. Demo queries are driven through real HTTP requests and a
+  curl recipe is printed for poking the running server.
 
     PYTHONPATH=src python examples/serve_search.py [--queries 256] [--small]
+    PYTHONPATH=src python examples/serve_search.py --small --gateway 8080 \\
+        [--partitions 2]
 """
 
 import argparse
+import json
 import os
 import sys
 import time
+import urllib.request
 
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))  # benchmarks/
 from benchmarks.common import build_benchmark_tree
 from repro.data.xmr_data import XMRShape, benchmark_queries
-from repro.serving import BatchPolicy, MicroBatcher, ServeConfig, XMRServingEngine
+from repro.serving import (
+    BatchPolicy,
+    MicroBatcher,
+    PartitionConfig,
+    Query,
+    QueryResult,
+    ServeConfig,
+    ServingGateway,
+    XMRServingEngine,
+)
 
 
 def main() -> None:
@@ -40,6 +58,10 @@ def main() -> None:
                     help="label-space partitions (scatter-gather index; "
                          "per-device model bytes shrink ~1/P, results stay "
                          "bitwise-identical)")
+    ap.add_argument("--gateway", type=int, default=None, metavar="PORT",
+                    help="serve over HTTP on this port (0 = ephemeral); "
+                         "with --partitions > 1 the engine runs against a "
+                         "cross-process worker fleet")
     args = ap.parse_args()
 
     if args.small:
@@ -57,6 +79,9 @@ def main() -> None:
 
     queries = benchmark_queries(shape, args.queries, rng)
 
+    if args.gateway is not None:
+        serve_gateway(tree, queries, args)
+        return
     if args.partitions > 1:
         serve_partitioned(tree, queries, shape, args)
         return
@@ -121,7 +146,7 @@ def serve_partitioned(tree, queries, shape, args) -> None:
 
     engine = XMRServingEngine(
         tree, ServeConfig(beam=args.beam, topk=10, max_batch=64,
-                          partitions=p))
+                          partition=PartitionConfig(partitions=p)))
     m = engine.index.manifest
     print(f"split level {m.level}; router {m.router_memory_bytes / 1e6:.1f} MB"
           f" (replicated); per-device max "
@@ -144,6 +169,76 @@ def serve_partitioned(tree, queries, shape, args) -> None:
     print(f"partition occupancy (share of top-k per partition): "
           f"{summ.get('partition_occupancy')}")
     print(mb.metrics.table4_row(f"partitioned-P{p}"))
+
+
+def serve_gateway(tree, queries, args) -> None:
+    """Serve the model over HTTP — in-process or against a worker fleet.
+
+    With ``--partitions P`` the engine's per-level merge runs against P
+    worker *subprocesses* (``repro.serving.fleet``) exchanging beams over a
+    socket RPC; the gateway answers with results bitwise-identical to the
+    in-process engine either way. Demo traffic goes through real HTTP
+    requests so the printed numbers include the network edge.
+    """
+    p = args.partitions
+    cfg = ServeConfig(beam=args.beam, topk=10, max_batch=64)
+    if p > 1:
+        cfg = ServeConfig(
+            beam=args.beam, topk=10, max_batch=64,
+            partition=PartitionConfig(partitions=p,
+                                      partition_sync="pipelined"),
+        )
+    engine = XMRServingEngine(tree, cfg)
+
+    fleet = None
+    if p > 1:
+        from repro.serving.fleet import PartitionFleet
+
+        print(f"\nlaunching {p} partition workers ...")
+        fleet = PartitionFleet.launch(p).attach(engine)
+        print(f"  workers up: {fleet.ping()}")
+
+    try:
+        mb = MicroBatcher(engine,
+                          BatchPolicy(args.max_batch, args.max_wait_ms))
+        with mb, ServingGateway(mb, port=args.gateway, fleet=fleet) as gw:
+            print(f"\n== HTTP gateway on {gw.url} ==")
+            print(f"  POST {gw.url}/v1/query   "
+                  '{"v": 1, "idx": [...], "val": [...]}')
+            print(f"  GET  {gw.url}/healthz    GET  {gw.url}/metrics")
+            print("  curl example:")
+            idx, val = queries.row(0)
+            wire = Query(idx=idx[:3], val=val[:3]).to_wire()
+            print(f"    curl -s {gw.url}/v1/query -d '{json.dumps(wire)}'")
+
+            n = min(args.queries, 64)
+            t0 = time.perf_counter()
+            for i in range(n):
+                idx, val = queries.row(i)
+                req = urllib.request.Request(
+                    gw.url + "/v1/query",
+                    data=json.dumps(Query(idx=idx, val=val,
+                                          qid=i).to_wire()).encode(),
+                    headers={"Content-Type": "application/json"},
+                )
+                with urllib.request.urlopen(req, timeout=300) as resp:
+                    res = QueryResult.from_wire(json.load(resp))
+                assert res.ok and res.qid == i
+            wall = time.perf_counter() - t0
+            print(f"\nserved {n} queries over HTTP in {wall:.1f}s "
+                  f"({n / wall:.1f} QPS incl. network edge)")
+            with urllib.request.urlopen(gw.url + "/metrics",
+                                        timeout=30) as resp:
+                summ = json.load(resp)
+            print(f"avg_batch={summ.get('avg_batch', 0):.1f} "
+                  f"p50={summ.get('p50_ms', 0):.2f}ms "
+                  f"p99={summ.get('p99_ms', 0):.2f}ms")
+            if fleet is not None:
+                print(f"partition occupancy: "
+                      f"{summ.get('partition_occupancy')}")
+    finally:
+        if fleet is not None:
+            fleet.close()
 
 
 if __name__ == "__main__":

@@ -21,25 +21,25 @@ from repro.index.partition import (
 from repro.index.placement import Placement, assign_partitions, place
 from repro.index.planner import (
     SYNC_MODES,
+    BeamTransport,
     ScatterGatherPlanner,
     merge_topk,
     reference_topk_width,
 )
 
+# Public API v1 (see the README table). ``HotBeamCache``, ``merge_topk``,
+# ``assign_partitions``, ``rebalance_bounds`` and ``reference_topk_width``
+# stay importable for tests/benches but are internal plumbing.
 __all__ = [
-    "HotBeamCache",
+    "BeamTransport",
     "PartitionInfo",
     "PartitionManifest",
     "PartitionedIndex",
     "Placement",
     "SYNC_MODES",
     "ScatterGatherPlanner",
-    "assign_partitions",
     "default_split_level",
-    "merge_topk",
     "partition_tree",
     "place",
     "rebalance",
-    "rebalance_bounds",
-    "reference_topk_width",
 ]

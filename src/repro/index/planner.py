@@ -290,6 +290,51 @@ _scatter_dense = jax.jit(mscm_lib.scatter_dense, static_argnums=2)
 SYNC_MODES = ("level", "pipelined", "final")
 
 
+class BeamTransport:
+    """Where the pipelined exchange's partition halves run.
+
+    The per-level pipelined protocol has two sides: P partitions computing
+    local canonical beams (score + speculate, the heavy half) and a
+    coordinator merging P tiny ``[n, w]`` beams (:func:`_merge_beams`). A
+    ``BeamTransport`` abstracts the partition side so the same coordinator
+    loop (:meth:`ScatterGatherPlanner._infer_transport`) drives in-process
+    partitions or remote worker processes — the fleet RPC implementation is
+    :class:`repro.serving.fleet.PartitionFleet`.
+
+    Protocol, per query batch:
+
+    * :meth:`begin` — ship the batch (ELL ``idx``/``val``) and the router
+      handoff beam; every partition computes its level-``li0`` local beam
+      and speculatively expands level ``li0+1``. Returns the P local beams
+      ``[(ids [n, w], scores [n, w]), ...]`` in partition order.
+    * :meth:`step` — ship the canonical winners of level ``level - 1``;
+      every partition reconciles its speculation, locally selects level
+      ``level``, and speculates ``level + 1``. Returns the P local beams.
+
+    All arrays cross the transport as host ``numpy`` — the tiny ``[n, w]``
+    beams are the only per-level traffic, which is what makes the exchange
+    bandwidth-trivial over a socket.
+    """
+
+    @property
+    def n_partitions(self) -> int:
+        raise NotImplementedError
+
+    def begin(
+        self,
+        x_idx: np.ndarray,
+        x_val: np.ndarray,
+        parent_ids: np.ndarray,
+        scores: np.ndarray,
+    ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        raise NotImplementedError
+
+    def step(
+        self, level: int, winner_ids: np.ndarray
+    ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        raise NotImplementedError
+
+
 class ScatterGatherPlanner:
     """Executes partitioned queries; see the module docstring for the path.
 
@@ -312,9 +357,14 @@ class ScatterGatherPlanner:
         sync: str = "level",
         placement: Optional[Placement] = None,
         cache_entries: int = 0,
+        transport: Optional[BeamTransport] = None,
     ) -> None:
         if sync not in SYNC_MODES:
             raise ValueError(f"sync={sync!r}; choose from {SYNC_MODES}")
+        self.transport = None
+        if transport is not None:
+            self._check_transport(sync, cache_entries, transport)
+            self.transport = transport
         self.index = index
         self.beam = beam
         self.topk = topk
@@ -352,6 +402,73 @@ class ScatterGatherPlanner:
             bounds = [p.chunk_start for p in index.manifest.partitions]
             bounds.append(index.manifest.partitions[-1].chunk_end)
             self.cache = HotBeamCache(cache_entries, bounds)
+
+    # -- transport (cross-process partitions) -------------------------------
+    def _check_transport(
+        self, sync: str, cache_entries: int, transport: BeamTransport
+    ) -> None:
+        if sync != "pipelined":
+            raise ValueError(
+                'a BeamTransport requires sync="pipelined" (the only mode '
+                "whose per-level exchange is the tiny local-beam protocol); "
+                f"got sync={sync!r}"
+            )
+        if cache_entries:
+            raise ValueError(
+                "beam_cache is incompatible with a BeamTransport: the "
+                "hot-beam owner-set skip is a host-side optimization of the "
+                "in-process scatter, and remote workers always participate"
+            )
+
+    def set_transport(self, transport: Optional[BeamTransport]) -> None:
+        """Route the partition halves through ``transport`` (None = local).
+
+        The coordinator keeps the router head and the per-level merge; the
+        partitions' score/speculate halves run wherever the transport says
+        (e.g. the fleet's worker processes). Results stay bitwise-identical
+        to in-process serving: both sides run the same jitted programs on
+        the same partition slices, and :func:`_merge_beams` is
+        concatenation-order independent.
+        """
+        if transport is not None:
+            self._check_transport(
+                self.sync, 0 if self.cache is None else 1, transport
+            )
+            if transport.n_partitions != self.index.n_partitions:
+                raise ValueError(
+                    f"transport serves {transport.n_partitions} partitions, "
+                    f"index has {self.index.n_partitions}"
+                )
+        self.transport = transport
+
+    def _infer_transport(self, x_idx, x_val, parent_ids, scores):
+        """Coordinator half of the pipelined exchange over a transport.
+
+        Same width/level recurrence as :meth:`_infer_pipelined`; the
+        partitions' reconcile/select/speculate halves run behind
+        ``self.transport`` (each worker mirrors the in-process device-stream
+        schedule, so the speculative matmuls still overlap this merge loop).
+        """
+        idx = self.index
+        depth = len(idx.n_cols)
+        width = parent_ids.shape[1]  # router handoff beam width
+        beams = self.transport.begin(
+            np.asarray(x_idx), np.asarray(x_val),
+            np.asarray(parent_ids), np.asarray(scores),
+        )
+        w_ids = w_scores = None
+        for li in range(idx.level, depth):
+            is_last = li == depth - 1
+            next_b = min(self.topk if is_last else self.beam, idx.n_cols[li])
+            width = min(next_b, width * idx.branching[li])
+            if li > idx.level:
+                beams = self.transport.step(li, np.asarray(w_ids))
+            w_ids, w_scores = _merge_beams(
+                tuple(jnp.asarray(i) for i, _ in beams),
+                tuple(jnp.asarray(s) for _, s in beams),
+                width=width,
+            )
+        return w_scores, w_ids
 
     # -- device hops --------------------------------------------------------
     def _to_partition(self, pid: int, *arrays):
@@ -416,6 +533,8 @@ class ScatterGatherPlanner:
     ) -> Tuple[jax.Array, jax.Array]:
         """Global (scores [n, k], labels [n, k]) for a query batch."""
         scores, parent_ids = self._route(x_idx, x_val)
+        if self.transport is not None:
+            return self._infer_transport(x_idx, x_val, parent_ids, scores)
         if self.sync == "final":
             return self._infer_final(x_idx, x_val, parent_ids, scores)
         active = self._active_partitions(parent_ids)

@@ -1,9 +1,26 @@
+"""Serving tier: engine, micro-batcher, admission, metrics, fleet, gateway.
+
+``__all__`` is the **Public API v1** surface (documented in the README
+table); everything else in the submodules is internal and may change
+without notice. The cross-process fleet lives in :mod:`repro.serving.fleet`
+(imported lazily — spawning workers is opt-in).
+"""
+
 from repro.serving.admission import (
     AdmissionController,
     AdmissionPolicy,
     DeadlineExceeded,
     Overloaded,
     ServingError,
+    WorkerUnavailable,
+)
+from repro.serving.api import (
+    HTTP_STATUS,
+    WIRE_VERSION,
+    Query,
+    QueryResult,
+    WireError,
+    status_for_exception,
 )
 from repro.serving.batcher import (
     BatchPolicy,
@@ -11,22 +28,41 @@ from repro.serving.batcher import (
     RequestQueue,
     StreamResult,
 )
-from repro.serving.engine import ServeConfig, XMRServingEngine, resolve_method
+from repro.serving.config import AdmissionConfig, PartitionConfig, ServeConfig
+from repro.serving.engine import XMRServingEngine, resolve_method
+from repro.serving.gateway import ServingGateway
 from repro.serving.metrics import LatencyStats, ServerMetrics
 
 __all__ = [
-    "AdmissionController",
-    "AdmissionPolicy",
-    "BatchPolicy",
-    "DeadlineExceeded",
-    "LatencyStats",
-    "MicroBatcher",
-    "Overloaded",
-    "RequestQueue",
+    # configuration
+    "AdmissionConfig",
+    "PartitionConfig",
     "ServeConfig",
-    "ServerMetrics",
-    "ServingError",
-    "StreamResult",
+    # engine + front end
+    "BatchPolicy",
+    "MicroBatcher",
     "XMRServingEngine",
     "resolve_method",
+    # request/response currency + wire schema
+    "HTTP_STATUS",
+    "Query",
+    "QueryResult",
+    "WIRE_VERSION",
+    "WireError",
+    "status_for_exception",
+    # typed errors
+    "DeadlineExceeded",
+    "Overloaded",
+    "ServingError",
+    "WorkerUnavailable",
+    # admission + metrics
+    "AdmissionController",
+    "AdmissionPolicy",
+    "LatencyStats",
+    "ServerMetrics",
+    # network edge
+    "ServingGateway",
+    # legacy aliases
+    "RequestQueue",
+    "StreamResult",
 ]

@@ -82,6 +82,25 @@ class DeadlineExceeded(ServingError):
         self.deadline_ms = deadline_ms
 
 
+class WorkerUnavailable(ServingError):
+    """A fleet partition worker died or timed out mid-request.
+
+    Raised by the fleet RPC layer (:mod:`repro.serving.fleet`) when a
+    partition process is unreachable — connection refused/reset, EOF, or a
+    per-call timeout. The batcher fails the in-flight batch's futures with
+    it (never hangs), and the gateway maps it to HTTP 503: the request *may*
+    be retried once the fleet is repaired, unlike a 4xx.
+    """
+
+    def __init__(self, worker: str, op: str, cause: str):
+        super().__init__(
+            f"fleet worker {worker} unavailable during {op!r}: {cause}"
+        )
+        self.worker = worker
+        self.op = op
+        self.cause = cause
+
+
 @dataclasses.dataclass
 class AdmissionPolicy:
     """Overload policy for a :class:`~repro.serving.batcher.MicroBatcher`.

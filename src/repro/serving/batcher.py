@@ -41,6 +41,7 @@ import jax
 import numpy as np
 
 from repro.serving.admission import AdmissionController, AdmissionPolicy
+from repro.serving.api import Query, QueryResult
 from repro.serving.engine import XMRServingEngine
 from repro.serving.metrics import ServerMetrics
 from repro.sparse.csr import CSR
@@ -172,23 +173,11 @@ def _device_ready(inflight: _InFlight) -> bool:
         return True
 
 
-@dataclasses.dataclass
-class StreamResult:
-    """One completed request from :meth:`MicroBatcher.stream`.
-
-    ``error`` holds the typed exception for shed/expired/failed requests
-    (``scores``/``labels`` are then None) so overload does not kill the
-    generator mid-stream.
-    """
-
-    index: int
-    scores: Optional[np.ndarray]
-    labels: Optional[np.ndarray]
-    error: Optional[BaseException] = None
-
-    @property
-    def ok(self) -> bool:
-        return self.error is None
+# ``stream`` used to yield an ad-hoc (index, scores, labels, error) tuple
+# type; the v1 surface yields :class:`~repro.serving.api.QueryResult`, whose
+# ``index``/``labels`` properties alias ``qid``/``ids`` so pre-v1 consumers
+# keep working. The old name stays importable.
+StreamResult = QueryResult
 
 
 class MicroBatcher:
@@ -223,10 +212,11 @@ class MicroBatcher:
                 f"max_batch={engine.config.max_batch}"
             )
         self.metrics = metrics or ServerMetrics()
+        adm = engine.config.admission
         self.admission = admission or AdmissionPolicy(
-            max_queue_depth=engine.config.queue_depth,
-            shed_policy=engine.config.shed_policy,
-            deadline_ms=engine.config.deadline_ms,
+            max_queue_depth=adm.queue_depth,
+            shed_policy=adm.shed_policy,
+            deadline_ms=adm.deadline_ms,
         )
         self._controller = AdmissionController(self.admission, self.metrics)
         self.queue = RequestQueue(self._controller)
@@ -286,21 +276,70 @@ class MicroBatcher:
     # -- client API ---------------------------------------------------------
     def submit(
         self,
-        idx: np.ndarray,
-        val: np.ndarray,
+        idx: Union[np.ndarray, Query],
+        val: Optional[np.ndarray] = None,
         *,
         deadline_ms: Optional[float] = None,
         priority: int = 0,
     ) -> Future:
-        """Enqueue one sparse query; resolves to (scores [k], labels [k]).
+        """Enqueue one sparse query.
+
+        Two call forms:
+
+        * ``submit(Query(...))`` — the v1 form. Resolves to a
+          :class:`~repro.serving.api.QueryResult` and **never raises**:
+          shed/expired/failed requests come back with the typed failure
+          encoded in ``result.status`` (and the exception on
+          ``result.error``), plus end-to-end wall time in
+          ``result.timing["e2e_ms"]``. This is the currency the gateway
+          serves over HTTP.
+        * ``submit(idx, val)`` — the legacy form. Resolves to a
+          ``(scores [k], labels [k])`` tuple; failures resolve the future
+          with the typed exception (``future.result()`` raises).
 
         Always returns a Future — a request shed by admission control comes
-        back with :class:`~repro.serving.admission.Overloaded` already set.
-        ``deadline_ms`` overrides the policy's default per-request deadline;
-        ``priority`` (higher = more important) steers weighted shedding
-        under the ``shed-oldest`` policy: low-priority requests are
-        sacrificed first.
+        back already resolved. ``deadline_ms`` overrides the policy's
+        default per-request deadline; ``priority`` (higher = more
+        important) steers weighted shedding under the ``shed-oldest``
+        policy: low-priority requests are sacrificed first.
         """
+        if isinstance(idx, Query):
+            if val is not None:
+                raise TypeError("submit(Query) takes no positional val")
+            q = idx
+            t0 = time.perf_counter()
+            inner = self._submit_arrays(
+                q.idx, q.val,
+                deadline_ms=q.deadline_ms if deadline_ms is None else deadline_ms,
+                priority=q.priority or priority,
+            )
+            out: Future = Future()
+
+            def _wrap(f: Future, qid: int = q.qid) -> None:
+                timing = {"e2e_ms": 1e3 * (time.perf_counter() - t0)}
+                exc = f.exception()
+                if exc is not None:
+                    out.set_result(QueryResult.from_error(qid, exc, timing))
+                else:
+                    s, l = f.result()
+                    out.set_result(
+                        QueryResult(qid=qid, ids=l, scores=s, timing=timing)
+                    )
+
+            inner.add_done_callback(_wrap)
+            return out
+        return self._submit_arrays(
+            idx, val, deadline_ms=deadline_ms, priority=priority
+        )
+
+    def _submit_arrays(
+        self,
+        idx: np.ndarray,
+        val: np.ndarray,
+        *,
+        deadline_ms: Optional[float],
+        priority: int,
+    ) -> Future:
         self.metrics.record_offered()
         t_enqueue = time.perf_counter()
         req = _Request(
@@ -325,13 +364,15 @@ class MicroBatcher:
         queries: Union[CSR, Iterable[Tuple[np.ndarray, np.ndarray]]],
         *,
         deadline_ms: Optional[float] = None,
-    ) -> Iterator[StreamResult]:
-        """Submit all queries, yield :class:`StreamResult` in completion order.
+    ) -> Iterator[QueryResult]:
+        """Submit all queries, yield :class:`QueryResult` in completion order.
 
-        Completion order is whatever the coalescing worker produces — early
-        batches stream back while later queries are still queued, and shed /
-        expired requests surface immediately as error results instead of
-        blocking the stream behind slower successes.
+        Each result's ``qid`` is its submission index. Completion order is
+        whatever the coalescing worker produces — early batches stream back
+        while later queries are still queued, and shed / expired requests
+        surface immediately as error-status results (``result.ok`` False,
+        ``result.error`` holding the typed exception) instead of blocking
+        the stream behind slower successes.
         """
         if isinstance(queries, CSR):
             pairs = (queries.row(i) for i in range(queries.shape[0]))
@@ -340,17 +381,13 @@ class MicroBatcher:
         done: queue_mod.Queue = queue_mod.Queue()
         n = 0
         for i, (idx, val) in enumerate(pairs):
-            fut = self.submit(idx, val, deadline_ms=deadline_ms)
-            fut.add_done_callback(lambda f, i=i: done.put((i, f)))
+            fut = self.submit(
+                Query(idx=idx, val=val, qid=i, deadline_ms=deadline_ms)
+            )
+            fut.add_done_callback(lambda f: done.put(f))
             n += 1
         for _ in range(n):
-            i, fut = done.get()
-            exc = fut.exception()
-            if exc is not None:
-                yield StreamResult(i, None, None, exc)
-            else:
-                s, l = fut.result()
-                yield StreamResult(i, s, l)
+            yield done.get().result()
 
     # -- worker -------------------------------------------------------------
     def _dispatch(self, reqs: List[_Request], trigger: str) -> _InFlight:

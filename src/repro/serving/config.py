@@ -1,0 +1,159 @@
+"""v1 serving configuration: nested groups + a flat-kwarg back-compat shim.
+
+``ServeConfig`` had grown 15 flat knobs across four concerns. The v1 surface
+groups them by who consumes them:
+
+* inference knobs stay top-level on :class:`ServeConfig` (``beam``,
+  ``topk``, ``method``, ``ell_width``, ``max_batch``, ``score_mode``,
+  ``qt``, ``shards``) — the engine reads these on every dispatch;
+* :class:`AdmissionConfig` — the overload policy the :class:`~repro.serving
+  .batcher.MicroBatcher` applies at the queue boundary;
+* :class:`PartitionConfig` — the label-partitioned dispatch topology
+  (:mod:`repro.index`).
+
+Back compat: the pre-v1 flat kwargs (``queue_depth=``, ``partitions=``, …)
+still work — ``ServeConfig`` routes them into the right nested group and
+emits a :class:`DeprecationWarning` — and the read side keeps flat
+*properties* (``config.partitions`` forwards to
+``config.partition.partitions``) so existing call sites and benches keep
+working unchanged. New code should write the nested form::
+
+    ServeConfig(
+        max_batch=64,
+        partition=PartitionConfig(partitions=2, partition_sync="pipelined"),
+        admission=AdmissionConfig(queue_depth="auto", deadline_ms=50.0),
+    )
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Union
+
+
+@dataclasses.dataclass
+class AdmissionConfig:
+    """Overload policy consumed by the :class:`MicroBatcher` front end."""
+
+    queue_depth: Union[int, str, None] = None  # bound | "auto" | unbounded
+    shed_policy: str = "reject"                # "reject" | "shed-oldest"
+    deadline_ms: Optional[float] = None        # default per-request deadline
+
+
+@dataclasses.dataclass
+class PartitionConfig:
+    """Label-partitioned dispatch topology (:mod:`repro.index`)."""
+
+    partitions: int = 1                    # label-space partitions
+    partition_level: Optional[int] = None  # split level (None = auto)
+    # "level"     — per-level exchange, bitwise-exact
+    # "pipelined" — exchange overlapped with the next level's MSCM via
+    #               speculative expansion; still bitwise-exact (and the only
+    #               mode the cross-process fleet transport supports)
+    # "final"     — one merge, no per-level sync; dominates, not bitwise
+    partition_sync: str = "level"
+    beam_cache: int = 0                    # hot-beam LRU entries (0 = off)
+
+
+_ADMISSION_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(AdmissionConfig)
+)
+_PARTITION_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(PartitionConfig)
+)
+
+
+@dataclasses.dataclass(init=False)
+class ServeConfig:
+    """Engine + serving-tier configuration (see the module docstring)."""
+
+    beam: int = 10
+    topk: int = 10
+    method: str = "auto"          # "auto" resolves per backend (see engine)
+    ell_width: int = 256          # query nnz cap (pad/truncate)
+    max_batch: int = 256
+    score_mode: str = "prod"
+    qt: int = 8                   # grouped-kernel query-tile height
+    shards: int = 1               # data-parallel device replicas per dispatch
+    admission: AdmissionConfig = dataclasses.field(
+        default_factory=AdmissionConfig
+    )
+    partition: PartitionConfig = dataclasses.field(
+        default_factory=PartitionConfig
+    )
+
+    def __init__(
+        self,
+        beam: int = 10,
+        topk: int = 10,
+        method: str = "auto",
+        ell_width: int = 256,
+        max_batch: int = 256,
+        score_mode: str = "prod",
+        qt: int = 8,
+        shards: int = 1,
+        admission: AdmissionConfig | None = None,
+        partition: PartitionConfig | None = None,
+        **flat,
+    ) -> None:
+        self.beam = beam
+        self.topk = topk
+        self.method = method
+        self.ell_width = ell_width
+        self.max_batch = max_batch
+        self.score_mode = score_mode
+        self.qt = qt
+        self.shards = shards
+        self.admission = admission if admission is not None else AdmissionConfig()
+        self.partition = partition if partition is not None else PartitionConfig()
+        if flat:
+            adm = {k: v for k, v in flat.items() if k in _ADMISSION_FIELDS}
+            prt = {k: v for k, v in flat.items() if k in _PARTITION_FIELDS}
+            unknown = set(flat) - set(adm) - set(prt)
+            if unknown:
+                raise TypeError(
+                    f"ServeConfig got unexpected keyword argument(s) "
+                    f"{sorted(unknown)}"
+                )
+            warnings.warn(
+                f"flat ServeConfig kwarg(s) {sorted(adm) + sorted(prt)} are "
+                "deprecated; pass admission=AdmissionConfig(...) / "
+                "partition=PartitionConfig(...) instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            # replace(), not setattr: never mutate a caller-shared group.
+            if adm:
+                self.admission = dataclasses.replace(self.admission, **adm)
+            if prt:
+                self.partition = dataclasses.replace(self.partition, **prt)
+
+    # -- flat read-side forwarding (pre-v1 call sites) ----------------------
+    @property
+    def queue_depth(self) -> Union[int, str, None]:
+        return self.admission.queue_depth
+
+    @property
+    def shed_policy(self) -> str:
+        return self.admission.shed_policy
+
+    @property
+    def deadline_ms(self) -> Optional[float]:
+        return self.admission.deadline_ms
+
+    @property
+    def partitions(self) -> int:
+        return self.partition.partitions
+
+    @property
+    def partition_level(self) -> Optional[int]:
+        return self.partition.partition_level
+
+    @property
+    def partition_sync(self) -> str:
+        return self.partition.partition_sync
+
+    @property
+    def beam_cache(self) -> int:
+        return self.partition.beam_cache

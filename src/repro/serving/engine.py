@@ -39,44 +39,25 @@ replicas behind one batcher.
 
 from __future__ import annotations
 
-import dataclasses
 import time
-from typing import Optional, Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tree import XMRTree
+from repro.serving.config import AdmissionConfig, PartitionConfig, ServeConfig
 from repro.serving.metrics import LatencyStats
 from repro.sparse.csr import CSR, rows_to_ell
 
-
-@dataclasses.dataclass
-class ServeConfig:
-    beam: int = 10
-    topk: int = 10
-    method: str = "auto"          # "auto" resolves per backend (see engine)
-    ell_width: int = 256          # query nnz cap (pad/truncate)
-    max_batch: int = 256
-    score_mode: str = "prod"
-    qt: int = 8                   # grouped-kernel query-tile height
-    # -- sharded dispatch ---------------------------------------------------
-    shards: int = 1               # data-parallel device replicas per dispatch
-    # -- label-partitioned dispatch (repro.index) ---------------------------
-    partitions: int = 1           # label-space partitions (model parallelism)
-    partition_level: Optional[int] = None  # split level (None = auto)
-    # "level"     — per-level exchange, bitwise-exact
-    # "pipelined" — per-level exchange overlapped with the next level's
-    #               MSCM via speculative expansion; still bitwise-exact
-    # "final"     — one merge, no per-level sync; dominates, not bitwise
-    partition_sync: str = "level"
-    beam_cache: int = 0           # hot-beam LRU entries (0 = off; syncs the
-                                  # router beam to host once per dispatch)
-    # -- overload policy (consumed by MicroBatcher) -------------------------
-    queue_depth: Union[int, str, None] = None  # bound | "auto" | unbounded
-    shed_policy: str = "reject"         # "reject" | "shed-oldest"
-    deadline_ms: Optional[float] = None  # default per-request deadline
+__all__ = [
+    "AdmissionConfig",
+    "PartitionConfig",
+    "ServeConfig",
+    "XMRServingEngine",
+    "resolve_method",
+]
 
 
 def resolve_method(method: str) -> str:
@@ -124,16 +105,16 @@ class XMRServingEngine:
             raise ValueError(
                 f"shards={shards} exceeds max_batch={self.config.max_batch}"
             )
-        if self.config.partitions > 1:
+        if self.config.partition.partitions > 1:
             # Label-partitioned dispatch: the tree is cut into P sub-trees
             # placed over a ("data", "model") mesh; every _run goes through
             # the scatter-gather planner (model-parallel x data-parallel,
             # bitwise-identical in the default "level" sync mode).
             from repro.index import ScatterGatherPlanner, partition_tree, place
 
-            c = self.config
+            c, pc = self.config, self.config.partition
             self.index = partition_tree(
-                tree, c.partitions, level=c.partition_level
+                tree, pc.partitions, level=pc.partition_level
             )
             self.placement = place(self.index, shards=shards)
             self.planner = ScatterGatherPlanner(
@@ -143,9 +124,9 @@ class XMRServingEngine:
                 method=self.method,
                 score_mode=c.score_mode,
                 qt=c.qt,
-                sync=c.partition_sync,
+                sync=pc.partition_sync,
                 placement=self.placement,
-                cache_entries=c.beam_cache,
+                cache_entries=pc.beam_cache,
             )
             self.mesh = self.placement.mesh
         elif shards > 1:

@@ -1,0 +1,23 @@
+"""Cross-process partition fleet: workers, launcher, and socket RPC.
+
+``PartitionFleet.launch(P).attach(engine)`` moves a partitioned engine's
+per-level scatter-gather work into P worker processes — each with its own
+JAX runtime and device memory — while the coordinator keeps the router head
+and the tiny per-level beam merges. Results stay bitwise-identical to
+in-process serving (pinned by tests/test_fleet_gateway.py).
+"""
+
+from repro.serving.fleet.launcher import (
+    PartitionFleet,
+    WorkerHandle,
+    launch_workers,
+)
+from repro.serving.fleet.rpc import RemoteError, WorkerConnection
+
+__all__ = [
+    "PartitionFleet",
+    "RemoteError",
+    "WorkerConnection",
+    "WorkerHandle",
+    "launch_workers",
+]

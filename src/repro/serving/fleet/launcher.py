@@ -1,0 +1,293 @@
+"""Launch + drive a fleet of partition worker processes.
+
+:func:`launch_workers` generalizes the subprocess-mesh pattern from the
+test suite into a reusable launcher: each worker is a real OS process
+(``python -m repro.serving.fleet.worker``) with its own JAX runtime, bound
+to an ephemeral localhost port it announces on stdout. On multi-host
+deployments the same :class:`PartitionFleet` client drives workers started
+out-of-band — pass ``(host, port)`` pairs to :meth:`PartitionFleet.connect`.
+
+:class:`PartitionFleet` implements the planner's
+:class:`~repro.index.planner.BeamTransport` protocol: ``load`` ships each
+partition's sliced layer tensors to its worker once, and ``begin``/``step``
+exchange only the tiny per-level ``[n, w]`` beams. Requests are fanned out
+to every worker *before* any reply is collected, so the P workers compute
+concurrently. Any dead or hung worker surfaces as the typed
+:class:`~repro.serving.admission.WorkerUnavailable` (per-call socket
+timeouts — never a hang), which the batcher turns into failed futures and
+the gateway maps to HTTP 503.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.index.partition import PartitionedIndex
+from repro.index.planner import BeamTransport
+from repro.serving.admission import WorkerUnavailable
+from repro.serving.fleet.rpc import WorkerConnection
+
+
+class WorkerHandle:
+    """One fleet worker: the process (when launched locally) + connection."""
+
+    def __init__(
+        self,
+        conn: WorkerConnection,
+        proc: Optional[subprocess.Popen] = None,
+        name: Optional[str] = None,
+    ) -> None:
+        self.conn = conn
+        self.proc = proc
+        self.name = name or conn.name
+
+    def alive(self) -> bool:
+        return self.proc is None or self.proc.poll() is None
+
+    def kill(self) -> None:
+        """Hard-kill the worker process (fault-injection / teardown)."""
+        if self.proc is not None and self.proc.poll() is None:
+            self.proc.kill()
+            self.proc.wait(timeout=30)
+        self.conn.close()
+
+
+def _read_announce(proc: subprocess.Popen, timeout_s: float, name: str) -> dict:
+    """Read the worker's one-line JSON announcement with a hard timeout."""
+    out: List[str] = []
+
+    def _read() -> None:
+        out.append(proc.stdout.readline())
+
+    t = threading.Thread(target=_read, daemon=True)
+    t.start()
+    t.join(timeout_s)
+    if t.is_alive() or not out or not out[0].strip():
+        proc.kill()
+        raise WorkerUnavailable(
+            name, "launch",
+            f"no announcement within {timeout_s:.0f}s "
+            f"(exit code {proc.poll()})",
+        )
+    return json.loads(out[0])
+
+
+def launch_workers(
+    n: int,
+    *,
+    host: str = "127.0.0.1",
+    env: Optional[dict] = None,
+    startup_timeout_s: float = 120.0,
+    rpc_timeout_s: float = 120.0,
+) -> List[WorkerHandle]:
+    """Spawn ``n`` local worker processes and connect to each.
+
+    The child environment inherits the parent's (so ``JAX_PLATFORMS``,
+    ``MSCM_FORCE_INTERPRET`` etc. propagate) with the directory containing
+    the ``repro`` package prepended to ``PYTHONPATH`` — workers import the
+    same code the parent runs, whatever the parent's install mode.
+    """
+    import repro
+
+    pkg_root = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+    child_env = dict(os.environ if env is None else env)
+    prev = child_env.get("PYTHONPATH", "")
+    child_env["PYTHONPATH"] = (
+        pkg_root + (os.pathsep + prev if prev else "")
+    )
+    handles: List[WorkerHandle] = []
+    try:
+        procs = [
+            subprocess.Popen(
+                [sys.executable, "-m", "repro.serving.fleet.worker",
+                 "--host", host, "--port", "0"],
+                stdout=subprocess.PIPE, text=True, env=child_env,
+            )
+            for _ in range(n)
+        ]
+        for pid, proc in enumerate(procs):
+            name = f"worker{pid}"
+            ann = _read_announce(proc, startup_timeout_s, name)
+            conn = WorkerConnection(
+                host, int(ann["port"]), timeout_s=rpc_timeout_s, name=name
+            )
+            handles.append(WorkerHandle(conn, proc, name))
+    except BaseException:
+        for h in handles:
+            h.kill()
+        raise
+    return handles
+
+
+class PartitionFleet(BeamTransport):
+    """Cross-process partition workers behind the planner's transport API."""
+
+    def __init__(self, handles: Sequence[WorkerHandle]) -> None:
+        if not handles:
+            raise ValueError("a fleet needs at least one worker")
+        self.handles = list(handles)
+        self._closed = False
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def launch(
+        cls,
+        n: int,
+        *,
+        host: str = "127.0.0.1",
+        env: Optional[dict] = None,
+        startup_timeout_s: float = 120.0,
+        rpc_timeout_s: float = 120.0,
+    ) -> "PartitionFleet":
+        """Spawn ``n`` local worker processes (one per partition)."""
+        return cls(launch_workers(
+            n, host=host, env=env,
+            startup_timeout_s=startup_timeout_s, rpc_timeout_s=rpc_timeout_s,
+        ))
+
+    @classmethod
+    def connect(
+        cls,
+        addresses: Sequence[Tuple[str, int]],
+        *,
+        rpc_timeout_s: float = 120.0,
+    ) -> "PartitionFleet":
+        """Attach to already-running workers (the multi-host deployment)."""
+        return cls([
+            WorkerHandle(WorkerConnection(
+                h, p, timeout_s=rpc_timeout_s, name=f"worker{i}@{h}:{p}"
+            ))
+            for i, (h, p) in enumerate(addresses)
+        ])
+
+    # -- BeamTransport ------------------------------------------------------
+    @property
+    def n_partitions(self) -> int:
+        return len(self.handles)
+
+    def _fanout(
+        self, op: str, headers: Sequence[dict],
+        arrays: Sequence[Sequence[np.ndarray]],
+    ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """Send to every worker first, then collect every reply.
+
+        Sends complete before any recv so the P workers overlap; replies
+        are collected in partition order (the merge is order-independent,
+        but determinism keeps debugging sane).
+        """
+        for h, hd, arr in zip(self.handles, headers, arrays):
+            h.conn.send(op, hd, arr)
+        out = []
+        for h in self.handles:
+            _, reply = h.conn.recv(op)
+            out.append((reply[0], reply[1]))
+        return out
+
+    def begin(self, x_idx, x_val, parent_ids, scores):
+        n = self.n_partitions
+        return self._fanout(
+            "begin", [{}] * n, [[x_idx, x_val, parent_ids, scores]] * n
+        )
+
+    def step(self, level, winner_ids):
+        n = self.n_partitions
+        return self._fanout("step", [{"level": int(level)}] * n,
+                            [[winner_ids]] * n)
+
+    # -- loading / attaching ------------------------------------------------
+    def load(
+        self,
+        index: PartitionedIndex,
+        *,
+        beam: int,
+        topk: int,
+        method: str,
+        score_mode: str = "prod",
+        qt: int = 8,
+    ) -> None:
+        """Ship each partition's sliced layers + metadata to its worker."""
+        if index.n_partitions != self.n_partitions:
+            raise ValueError(
+                f"index has {index.n_partitions} partitions, fleet has "
+                f"{self.n_partitions} workers"
+            )
+        for h, part, info in zip(
+            self.handles, index.parts, index.manifest.partitions
+        ):
+            header = {
+                "pid": info.pid,
+                "level": index.level,
+                "n_cols": list(index.n_cols),
+                "branching": list(index.branching),
+                "d": index.d,
+                "chunk_start": info.chunk_start,
+                "beam": beam, "topk": topk, "method": method,
+                "score_mode": score_mode, "qt": qt,
+                "part_n_cols": list(part.n_cols),
+            }
+            arrays = [
+                np.asarray(t)
+                for lay in part.layers
+                for t in (lay.chunk_rows, lay.chunk_vals,
+                          lay.col_rows, lay.col_vals)
+            ]
+            h.conn.send("load", header, arrays)
+        for h in self.handles:
+            h.conn.recv("load")
+
+    def attach(self, engine) -> "PartitionFleet":
+        """Serve ``engine``'s partitions from this fleet's workers.
+
+        The engine must be partitioned with ``partition_sync="pipelined"``
+        (the only exchange the transport protocol covers) and no hot-beam
+        cache. Ships the partitions, then routes the planner's per-level
+        partition work through this fleet — the coordinator keeps only the
+        router head and the tiny beam merges.
+        """
+        if engine.planner is None:
+            raise ValueError("engine is unpartitioned; nothing to serve remotely")
+        c = engine.config
+        engine.planner.set_transport(self)
+        self.load(
+            engine.index,
+            beam=c.beam, topk=c.topk, method=engine.method,
+            score_mode=c.score_mode, qt=c.qt,
+        )
+        engine.fleet = self
+        return self
+
+    # -- health / lifecycle -------------------------------------------------
+    def ping(self) -> Dict[str, bool]:
+        """Per-worker liveness: one bounded RPC each, False on any failure."""
+        out = {}
+        for h in self.handles:
+            try:
+                h.conn.call("ping")
+                out[h.name] = True
+            except (WorkerUnavailable, RuntimeError):
+                out[h.name] = False
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for h in self.handles:
+            try:
+                h.conn.call("shutdown")
+            except (WorkerUnavailable, RuntimeError):
+                pass
+            h.kill()
+
+    def __enter__(self) -> "PartitionFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,151 @@
+"""Length-prefixed socket RPC for the partition fleet.
+
+One frame is::
+
+    [8-byte big-endian frame length]
+    [4-byte big-endian header length][JSON header]
+    [raw array bytes, concatenated]
+
+The header is a small JSON object (op name, metadata, and an ``"arrays"``
+list of ``{"dtype", "shape"}`` descriptors); array payloads follow as raw
+contiguous bytes in descriptor order. Pipelined beams are tiny ``[n, w]``
+tensors, so JSON header + raw bytes is both simple and fast — no pickle on
+the wire (workers never deserialize executable state).
+
+:class:`WorkerConnection` is the client side: per-call timeouts, and every
+transport-level failure (refused/reset connection, EOF from a dead process,
+a timeout) raises the typed
+:class:`~repro.serving.admission.WorkerUnavailable` so callers get a
+bounded, classifiable failure instead of a hang. A worker that *replied*
+with an application error raises :class:`RemoteError` instead — the worker
+is alive, the request was bad.
+"""
+
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.admission import WorkerUnavailable
+
+_LEN = struct.Struct(">Q")   # frame length
+_HLEN = struct.Struct(">I")  # header length
+
+#: Refuse frames beyond this (a corrupt length prefix must not OOM us).
+MAX_FRAME_BYTES = 1 << 33
+
+
+class RemoteError(RuntimeError):
+    """The worker processed the call and replied with an error."""
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        k = sock.recv_into(view[got:], n - got)
+        if k == 0:
+            raise EOFError(f"connection closed after {got}/{n} bytes")
+        got += k
+    return bytes(buf)
+
+
+def send_frame(
+    sock: socket.socket, header: dict, arrays: Sequence[np.ndarray] = ()
+) -> None:
+    arrays = [np.ascontiguousarray(a) for a in arrays]
+    header = dict(header)
+    header["arrays"] = [
+        {"dtype": a.dtype.str, "shape": list(a.shape)} for a in arrays
+    ]
+    hbytes = json.dumps(header).encode()
+    body = len(hbytes) + sum(a.nbytes for a in arrays)
+    parts = [_LEN.pack(_HLEN.size + body), _HLEN.pack(len(hbytes)), hbytes]
+    parts.extend(a.tobytes() for a in arrays)
+    sock.sendall(b"".join(parts))
+
+
+def recv_frame(sock: socket.socket) -> Tuple[dict, List[np.ndarray]]:
+    (total,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    if total > MAX_FRAME_BYTES:
+        raise ValueError(f"frame length {total} exceeds {MAX_FRAME_BYTES}")
+    payload = _recv_exact(sock, total)
+    (hlen,) = _HLEN.unpack(payload[: _HLEN.size])
+    off = _HLEN.size + hlen
+    header = json.loads(payload[_HLEN.size : off])
+    arrays = []
+    for desc in header.pop("arrays", []):
+        dt = np.dtype(desc["dtype"])
+        shape = tuple(desc["shape"])
+        n_elem = int(np.prod(shape, dtype=np.int64))
+        arrays.append(
+            np.frombuffer(payload, dt, count=n_elem, offset=off)
+            .reshape(shape)
+            .copy()
+        )
+        off += n_elem * dt.itemsize
+    return header, arrays
+
+
+class WorkerConnection:
+    """Client handle to one fleet worker, with per-call timeouts.
+
+    ``send``/``recv`` are split so a caller can fan a request out to every
+    worker *before* collecting any reply — the workers compute in parallel
+    while the client is still writing to the others.
+    """
+
+    def __init__(
+        self, host: str, port: int, *, timeout_s: float = 60.0,
+        name: Optional[str] = None,
+    ) -> None:
+        self.name = name or f"{host}:{port}"
+        self.timeout_s = timeout_s
+        try:
+            self._sock = socket.create_connection((host, port), timeout=timeout_s)
+            self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError as exc:
+            raise WorkerUnavailable(self.name, "connect", str(exc)) from exc
+
+    def send(
+        self, op: str, header: Optional[dict] = None,
+        arrays: Sequence[np.ndarray] = (),
+    ) -> None:
+        msg = dict(header or {})
+        msg["op"] = op
+        try:
+            self._sock.settimeout(self.timeout_s)
+            send_frame(self._sock, msg, arrays)
+        except (OSError, EOFError) as exc:
+            raise WorkerUnavailable(self.name, op, str(exc)) from exc
+
+    def recv(self, op: str = "reply") -> Tuple[dict, List[np.ndarray]]:
+        try:
+            self._sock.settimeout(self.timeout_s)
+            header, arrays = recv_frame(self._sock)
+        except (OSError, EOFError, socket.timeout) as exc:
+            raise WorkerUnavailable(self.name, op, str(exc)) from exc
+        if not header.get("ok", False):
+            raise RemoteError(
+                f"worker {self.name} failed {op!r}: "
+                f"{header.get('error', 'unknown error')}"
+            )
+        return header, arrays
+
+    def call(
+        self, op: str, header: Optional[dict] = None,
+        arrays: Sequence[np.ndarray] = (),
+    ) -> Tuple[dict, List[np.ndarray]]:
+        self.send(op, header, arrays)
+        return self.recv(op)
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass

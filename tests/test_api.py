@@ -1,0 +1,184 @@
+"""v1 serving API: wire round-trips, status mapping, config shim."""
+
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.serving import (
+    HTTP_STATUS,
+    AdmissionConfig,
+    DeadlineExceeded,
+    Overloaded,
+    PartitionConfig,
+    Query,
+    QueryResult,
+    ServeConfig,
+    WireError,
+    WorkerUnavailable,
+    status_for_exception,
+)
+from repro.serving.api import (
+    STATUS_DEADLINE_EXCEEDED,
+    STATUS_INTERNAL_ERROR,
+    STATUS_OK,
+    STATUS_OVERLOADED,
+    STATUS_WORKER_UNAVAILABLE,
+)
+
+
+# -- Query / QueryResult wire round-trips ----------------------------------
+
+def _exotic_f32():
+    """float32 values whose bits must survive the JSON round trip."""
+    return np.asarray(
+        [0.1, 1 / 3, np.float32(1e-30), np.float32(3.4e38),
+         np.nextafter(np.float32(1.0), np.float32(2.0)),
+         -0.0, 7.7e-7],
+        np.float32,
+    )
+
+
+def test_query_wire_roundtrip_bitwise():
+    q = Query(
+        idx=np.arange(7, dtype=np.int32) * 1000,
+        val=_exotic_f32(),
+        qid=42, deadline_ms=12.5, priority=3,
+    )
+    doc = json.loads(json.dumps(q.to_wire()))  # through real JSON text
+    q2 = Query.from_wire(doc)
+    assert doc["v"] == 1
+    assert q2.qid == 42 and q2.deadline_ms == 12.5 and q2.priority == 3
+    assert q2.idx.dtype == np.int32 and q2.val.dtype == np.float32
+    assert np.array_equal(q2.idx, q.idx)
+    assert np.array_equal(q2.val.view(np.uint32), q.val.view(np.uint32))
+
+
+def test_query_result_wire_roundtrip_bitwise():
+    r = QueryResult(
+        qid=7,
+        ids=np.asarray([5, 1, 9], np.int32),
+        scores=_exotic_f32()[:3],
+        timing={"e2e_ms": 1.25},
+    )
+    r2 = QueryResult.from_wire(json.loads(json.dumps(r.to_wire())))
+    assert r2.ok and r2.qid == 7
+    assert np.array_equal(r2.ids, r.ids)
+    assert np.array_equal(r2.scores.view(np.uint32), r.scores.view(np.uint32))
+    assert r2.timing == {"e2e_ms": 1.25}
+    # legacy StreamResult aliases
+    assert r2.index == 7
+    assert np.array_equal(r2.labels, r.ids)
+
+
+def test_error_result_wire_roundtrip():
+    exc = Overloaded(16, "reject")
+    r = QueryResult.from_error(3, exc)
+    assert not r.ok and r.error is exc
+    r2 = QueryResult.from_wire(json.loads(json.dumps(r.to_wire())))
+    assert r2.status == STATUS_OVERLOADED and not r2.ok
+    assert r2.ids is None and r2.scores is None
+    assert "queue depth" in r2.detail
+    assert r2.error is None  # exceptions never cross the wire
+
+
+def test_wire_version_rejected():
+    q = Query(idx=np.asarray([1], np.int32), val=np.asarray([1.0], np.float32))
+    doc = q.to_wire()
+    doc["v"] = 2
+    with pytest.raises(WireError, match="wire version"):
+        Query.from_wire(doc)
+    with pytest.raises(WireError):
+        QueryResult.from_wire({"v": None, "status": "ok"})
+    with pytest.raises(WireError, match="malformed"):
+        Query.from_wire({"v": 1})  # missing idx/val
+
+
+# -- error -> status -> HTTP code mapping ----------------------------------
+
+@pytest.mark.parametrize(
+    "exc,status,code",
+    [
+        (Overloaded(8, "reject"), STATUS_OVERLOADED, 429),
+        (DeadlineExceeded(5.0, 1.0), STATUS_DEADLINE_EXCEEDED, 504),
+        (WorkerUnavailable("worker0", "begin", "timed out"),
+         STATUS_WORKER_UNAVAILABLE, 503),
+        (RuntimeError("boom"), STATUS_INTERNAL_ERROR, 500),
+    ],
+)
+def test_status_mapping(exc, status, code):
+    assert status_for_exception(exc) == status
+    assert HTTP_STATUS[status] == code
+    r = QueryResult.from_error(0, exc)
+    assert r.status == status and r.http_status == code
+
+
+def test_http_status_table():
+    assert HTTP_STATUS[STATUS_OK] == 200
+    assert HTTP_STATUS["invalid"] == 400
+
+
+def test_worker_unavailable_is_typed():
+    exc = WorkerUnavailable("worker1", "step", "connection reset")
+    assert exc.worker == "worker1" and exc.op == "step"
+    from repro.serving import ServingError
+
+    assert isinstance(exc, ServingError)
+
+
+# -- ServeConfig redesign + deprecation shim -------------------------------
+
+def test_nested_config_groups():
+    cfg = ServeConfig(
+        max_batch=64,
+        admission=AdmissionConfig(queue_depth=32, shed_policy="shed-oldest",
+                                  deadline_ms=50.0),
+        partition=PartitionConfig(partitions=4, partition_sync="pipelined",
+                                  beam_cache=8),
+    )
+    assert cfg.admission.queue_depth == 32
+    assert cfg.partition.partitions == 4
+    # flat read-side forwarding keeps pre-v1 call sites working
+    assert cfg.queue_depth == 32
+    assert cfg.shed_policy == "shed-oldest"
+    assert cfg.deadline_ms == 50.0
+    assert cfg.partitions == 4
+    assert cfg.partition_level is None
+    assert cfg.partition_sync == "pipelined"
+    assert cfg.beam_cache == 8
+
+
+def test_flat_kwargs_resolve_and_warn():
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        cfg = ServeConfig(
+            beam=5, partitions=2, partition_sync="pipelined",
+            queue_depth="auto", deadline_ms=10.0,
+        )
+    assert cfg.beam == 5
+    assert cfg.partition.partitions == 2
+    assert cfg.partition.partition_sync == "pipelined"
+    assert cfg.admission.queue_depth == "auto"
+    assert cfg.admission.deadline_ms == 10.0
+
+
+def test_flat_kwargs_do_not_mutate_shared_group():
+    shared = PartitionConfig(partitions=2)
+    with pytest.warns(DeprecationWarning):
+        cfg = ServeConfig(partition=shared, beam_cache=16)
+    assert cfg.partition.beam_cache == 16
+    assert shared.beam_cache == 0  # caller's instance untouched
+
+
+def test_unknown_kwarg_raises():
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        ServeConfig(nonsense=1)
+
+
+def test_default_config_warns_nothing():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        cfg = ServeConfig()
+    assert cfg.partitions == 1 and cfg.queue_depth is None
+    assert dataclasses.is_dataclass(cfg)

@@ -1,0 +1,269 @@
+"""Cross-process fleet + HTTP gateway: exactness, errors, failure paths.
+
+The integration test is the ISSUE 6 acceptance pin: a P=2 partition fleet
+(real worker subprocesses, ``partition_sync="pipelined"``) behind the HTTP
+gateway serves results **bitwise-identical** to the in-process
+unpartitioned engine — through JSON, over a socket — and a killed worker
+surfaces as a typed 503 within the RPC timeout, never a hang.
+
+The gateway's error→status mapping (429/504/400) is pinned separately on a
+cheap in-process engine so the contract is exercised without subprocesses.
+"""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import XMRTree
+from repro.serving import (
+    AdmissionPolicy,
+    BatchPolicy,
+    MicroBatcher,
+    PartitionConfig,
+    Query,
+    ServeConfig,
+    ServingGateway,
+    XMRServingEngine,
+)
+from repro.sparse import random_sparse_csr
+from tests.conftest import make_tree_weights
+
+
+def _post(url: str, doc: dict, timeout: float = 120.0):
+    """POST JSON, returning (http_status, body_doc) for any status code."""
+    req = urllib.request.Request(
+        url + "/v1/query", data=json.dumps(doc).encode(),
+        headers={"Content-Type": "application/json"},
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.load(resp)
+    except urllib.error.HTTPError as err:
+        return err.code, json.load(err)
+
+
+def _get(url: str, path: str, timeout: float = 120.0):
+    try:
+        with urllib.request.urlopen(url + path, timeout=timeout) as resp:
+            return resp.status, json.load(resp)
+    except urllib.error.HTTPError as err:
+        return err.code, json.load(err)
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    rng = np.random.default_rng(11)
+    d, B = 200, 8
+    ws = make_tree_weights(rng, d, [8, 64, 512], B)
+    tree = XMRTree.from_weight_matrices(ws, B)
+    engine = XMRServingEngine(tree, ServeConfig(ell_width=32, max_batch=64))
+    queries = random_sparse_csr(20, d, 15, rng)
+    ref_s, ref_l = engine.serve_batch(queries)
+    return tree, engine, queries, ref_s, ref_l
+
+
+# ---------------------------------------------------------------------------
+# multi-process integration: fleet + gateway, bitwise + typed 503
+# ---------------------------------------------------------------------------
+
+def test_fleet_gateway_bitwise_and_worker_failure(small_setup):
+    from repro.serving.fleet import PartitionFleet
+
+    tree, _, queries, ref_s, ref_l = small_setup
+    engine = XMRServingEngine(
+        tree,
+        ServeConfig(
+            ell_width=32, max_batch=64,
+            partition=PartitionConfig(partitions=2,
+                                      partition_sync="pipelined"),
+        ),
+    )
+    with PartitionFleet.launch(2, rpc_timeout_s=120.0) as fleet:
+        fleet.attach(engine)
+        assert engine.planner.transport is fleet
+        with MicroBatcher(engine, BatchPolicy(max_batch=8, max_wait_ms=5.0)) \
+                as mb, ServingGateway(mb, fleet=fleet) as gw:
+            # healthy fleet
+            code, doc = _get(gw.url, "/healthz")
+            assert code == 200 and doc["status"] == "ok"
+            assert doc["workers"] == {"worker0": True, "worker1": True}
+
+            # every query served over HTTP is bitwise the in-process result
+            for i in range(queries.shape[0]):
+                idx, val = queries.row(i)
+                code, doc = _post(
+                    gw.url, Query(idx=idx, val=val, qid=i).to_wire()
+                )
+                assert code == 200 and doc["status"] == "ok", doc
+                assert doc["qid"] == i and doc["v"] == 1
+                got_s = np.asarray(doc["scores"], np.float32)
+                got_l = np.asarray(doc["ids"], np.int32)
+                assert np.array_equal(got_l, ref_l[i])
+                assert np.array_equal(
+                    got_s.view(np.uint32), ref_s[i].view(np.uint32)
+                ), f"query {i} not bitwise"
+                assert doc["timing"]["e2e_ms"] > 0
+
+            # metrics reflect the served traffic
+            code, doc = _get(gw.url, "/metrics")
+            assert code == 200
+            assert doc["count"] == queries.shape[0]
+            assert len(doc["partition_occupancy"]) == 2
+
+            # kill one worker: typed 503 within the timeout, not a hang
+            fleet.handles[0].kill()
+            idx, val = queries.row(0)
+            t0 = time.perf_counter()
+            code, doc = _post(gw.url, Query(idx=idx, val=val, qid=99).to_wire())
+            elapsed = time.perf_counter() - t0
+            assert code == 503, doc
+            assert doc["status"] == "worker_unavailable"
+            assert "worker0" in doc["detail"]
+            assert elapsed < 60.0  # bounded: EOF beats the RPC timeout
+
+            # health degrades, naming the dead worker
+            code, doc = _get(gw.url, "/healthz")
+            assert code == 503 and doc["status"] == "degraded"
+            assert doc["workers"]["worker0"] is False
+            assert doc["workers"]["worker1"] is True
+
+
+def test_fleet_transport_requires_pipelined(small_setup):
+    from repro.index import BeamTransport
+
+    tree, *_ = small_setup
+
+    class _Dummy(BeamTransport):
+        @property
+        def n_partitions(self):
+            return 2
+
+    eng_level = XMRServingEngine(
+        tree, ServeConfig(ell_width=32,
+                          partition=PartitionConfig(partitions=2)),
+    )
+    with pytest.raises(ValueError, match="pipelined"):
+        eng_level.planner.set_transport(_Dummy())
+
+    eng_cache = XMRServingEngine(
+        tree,
+        ServeConfig(ell_width=32,
+                    partition=PartitionConfig(
+                        partitions=2, partition_sync="pipelined",
+                        beam_cache=4)),
+    )
+    with pytest.raises(ValueError, match="beam_cache"):
+        eng_cache.planner.set_transport(_Dummy())
+
+    eng = XMRServingEngine(
+        tree,
+        ServeConfig(ell_width=32,
+                    partition=PartitionConfig(partitions=3,
+                                              partition_sync="pipelined")),
+    )
+    with pytest.raises(ValueError, match="partitions"):
+        eng.planner.set_transport(_Dummy())
+
+
+# ---------------------------------------------------------------------------
+# gateway error mapping on a cheap in-process engine
+# ---------------------------------------------------------------------------
+
+def test_gateway_maps_overloaded_to_429(small_setup):
+    _, engine, queries, ref_s, ref_l = small_setup
+    real_run = engine._run
+
+    def slow_run(xi, xv):
+        time.sleep(0.05)  # stretch device time so the queue must fill
+        return real_run(xi, xv)
+
+    engine._run = slow_run
+    try:
+        mb = MicroBatcher(
+            engine, BatchPolicy(max_batch=1, max_wait_ms=0.5),
+            admission=AdmissionPolicy(max_queue_depth=1),
+            warmup_on_start=False,
+        ).start()
+        with ServingGateway(mb) as gw:
+            codes, bodies = [], []
+            lock = threading.Lock()
+
+            def fire(i):
+                idx, val = queries.row(i % queries.shape[0])
+                code, doc = _post(
+                    gw.url, Query(idx=idx, val=val, qid=i).to_wire()
+                )
+                with lock:
+                    codes.append(code)
+                    bodies.append(doc)
+
+            threads = [threading.Thread(target=fire, args=(i,))
+                       for i in range(12)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=120)
+        mb.stop()
+    finally:
+        engine._run = real_run
+    assert codes.count(429) >= 1, codes
+    assert codes.count(200) >= 1, codes
+    for code, doc in zip(codes, bodies):
+        if code == 429:
+            assert doc["status"] == "overloaded" and "shed" in doc["detail"]
+        else:
+            assert code == 200
+            i = doc["qid"] % queries.shape[0]
+            assert np.array_equal(np.asarray(doc["ids"], np.int32), ref_l[i])
+
+
+def test_gateway_maps_deadline_to_504(small_setup):
+    _, engine, queries, *_ = small_setup
+    with MicroBatcher(engine, BatchPolicy(max_batch=4, max_wait_ms=1.0),
+                      warmup_on_start=False) as mb, ServingGateway(mb) as gw:
+        idx, val = queries.row(0)
+        q = Query(idx=idx, val=val, qid=1, deadline_ms=0.0)  # born expired
+        code, doc = _post(gw.url, q.to_wire())
+        assert code == 504, doc
+        assert doc["status"] == "deadline_exceeded"
+        assert "deadline exceeded" in doc["detail"]
+
+
+def test_gateway_rejects_bad_requests(small_setup):
+    _, engine, queries, *_ = small_setup
+    with MicroBatcher(engine, warmup_on_start=False) as mb, \
+            ServingGateway(mb) as gw:
+        # malformed JSON
+        code, doc = _post(gw.url, {"v": 1})
+        assert code == 400 and doc["status"] == "invalid"
+        # wrong wire version
+        idx, val = queries.row(0)
+        wire = Query(idx=idx, val=val).to_wire()
+        wire["v"] = 99
+        code, doc = _post(gw.url, wire)
+        assert code == 400 and "wire version" in doc["detail"]
+        # unknown paths
+        assert _get(gw.url, "/nope")[0] == 404
+        # healthz without a fleet
+        code, doc = _get(gw.url, "/healthz")
+        assert code == 200 and "workers" not in doc
+
+
+def test_gateway_after_shutdown_is_unavailable(small_setup):
+    _, engine, queries, *_ = small_setup
+    mb = MicroBatcher(engine, warmup_on_start=False).start()
+    gw = ServingGateway(mb).start()
+    try:
+        mb.stop()  # closed queue: requests can no longer be admitted
+        idx, val = queries.row(0)
+        code, doc = _post(gw.url, Query(idx=idx, val=val).to_wire())
+        assert code == 503, doc
+        code, doc = _get(gw.url, "/healthz")
+        assert code == 503 and doc["status"] == "closed"
+    finally:
+        gw.close()
