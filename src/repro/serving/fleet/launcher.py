@@ -102,16 +102,15 @@ def launch_workers(
     child_env["PYTHONPATH"] = (
         pkg_root + (os.pathsep + prev if prev else "")
     )
+    procs: List[subprocess.Popen] = []
     handles: List[WorkerHandle] = []
     try:
-        procs = [
-            subprocess.Popen(
+        for _ in range(n):
+            procs.append(subprocess.Popen(
                 [sys.executable, "-m", "repro.serving.fleet.worker",
                  "--host", host, "--port", "0"],
                 stdout=subprocess.PIPE, text=True, env=child_env,
-            )
-            for _ in range(n)
-        ]
+            ))
         for pid, proc in enumerate(procs):
             name = f"worker{pid}"
             ann = _read_announce(proc, startup_timeout_s, name)
@@ -120,8 +119,24 @@ def launch_workers(
             )
             handles.append(WorkerHandle(conn, proc, name))
     except BaseException:
+        # Reap EVERY spawned process, including those not yet wrapped in a
+        # WorkerHandle — a failure at worker i must not orphan i..n-1 as
+        # live JAX processes bound to ports. handles[j] wraps procs[j], so
+        # the unwrapped tail is exactly procs[len(handles):].
         for h in handles:
-            h.kill()
+            try:
+                h.kill()
+            except Exception:
+                pass
+        tail = procs[len(handles):]
+        for proc in tail:
+            if proc.poll() is None:
+                proc.kill()
+        for proc in tail:
+            try:
+                proc.wait(timeout=30)
+            except Exception:
+                pass
         raise
     return handles
 
@@ -172,23 +187,60 @@ class PartitionFleet(BeamTransport):
     def n_partitions(self) -> int:
         return len(self.handles)
 
+    def _reset_connections(self) -> None:
+        """Poison recovery: give every worker a fresh, in-sync stream.
+
+        After an abandoned exchange, replies from the still-healthy workers
+        may sit buffered on their sockets; the next call's recv would
+        consume one as its own (identical ``[n, w]`` shapes — silently
+        wrong results, not an error). Reconnecting drops those streams;
+        workers keep their loaded partition across client connections. A
+        dead worker's connection stays closed and surfaces as the typed
+        ``WorkerUnavailable`` on next use.
+        """
+        for h in self.handles:
+            try:
+                h.conn.reconnect()
+            except WorkerUnavailable:
+                pass
+
+    def _exchange(
+        self, op: str, headers: Sequence[dict],
+        arrays: Sequence[Sequence[np.ndarray]],
+    ) -> List[Tuple[dict, List[np.ndarray]]]:
+        """Locked fan-out: send to every worker first, then collect replies.
+
+        Sends complete before any recv so the P workers overlap; replies
+        are collected in partition order (the merge is order-independent,
+        but determinism keeps debugging sane). Every connection's lock is
+        held for the whole exchange so a concurrent health-check ping
+        cannot interleave frames with the beam protocol. If any send/recv
+        fails, the in-flight exchange is abandoned and every connection is
+        reset before the error propagates — undrained replies must never
+        be consumed by the next request.
+        """
+        for h in self.handles:
+            h.conn.lock.acquire()
+        try:
+            try:
+                for h, hd, arr in zip(self.handles, headers, arrays):
+                    h.conn.send(op, hd, arr)
+                return [h.conn.recv(op) for h in self.handles]
+            except BaseException:
+                self._reset_connections()
+                raise
+        finally:
+            for h in self.handles:
+                h.conn.lock.release()
+
     def _fanout(
         self, op: str, headers: Sequence[dict],
         arrays: Sequence[Sequence[np.ndarray]],
     ) -> List[Tuple[np.ndarray, np.ndarray]]:
-        """Send to every worker first, then collect every reply.
-
-        Sends complete before any recv so the P workers overlap; replies
-        are collected in partition order (the merge is order-independent,
-        but determinism keeps debugging sane).
-        """
-        for h, hd, arr in zip(self.handles, headers, arrays):
-            h.conn.send(op, hd, arr)
-        out = []
-        for h in self.handles:
-            _, reply = h.conn.recv(op)
-            out.append((reply[0], reply[1]))
-        return out
+        return [
+            (reply[0], reply[1])
+            for _, reply in self._exchange(op, headers, arrays)
+        ]
 
     def begin(self, x_idx, x_val, parent_ids, scores):
         n = self.n_partitions
@@ -218,10 +270,10 @@ class PartitionFleet(BeamTransport):
                 f"index has {index.n_partitions} partitions, fleet has "
                 f"{self.n_partitions} workers"
             )
-        for h, part, info in zip(
-            self.handles, index.parts, index.manifest.partitions
-        ):
-            header = {
+        headers = []
+        arrays = []
+        for part, info in zip(index.parts, index.manifest.partitions):
+            headers.append({
                 "pid": info.pid,
                 "level": index.level,
                 "n_cols": list(index.n_cols),
@@ -231,16 +283,14 @@ class PartitionFleet(BeamTransport):
                 "beam": beam, "topk": topk, "method": method,
                 "score_mode": score_mode, "qt": qt,
                 "part_n_cols": list(part.n_cols),
-            }
-            arrays = [
+            })
+            arrays.append([
                 np.asarray(t)
                 for lay in part.layers
                 for t in (lay.chunk_rows, lay.chunk_vals,
                           lay.col_rows, lay.col_vals)
-            ]
-            h.conn.send("load", header, arrays)
-        for h in self.handles:
-            h.conn.recv("load")
+            ])
+        self._exchange("load", headers, arrays)
 
     def attach(self, engine) -> "PartitionFleet":
         """Serve ``engine``'s partitions from this fleet's workers.
@@ -264,15 +314,27 @@ class PartitionFleet(BeamTransport):
         return self
 
     # -- health / lifecycle -------------------------------------------------
-    def ping(self) -> Dict[str, bool]:
-        """Per-worker liveness: one bounded RPC each, False on any failure."""
+    def ping(self, timeout_s: float = 5.0) -> Dict[str, bool]:
+        """Per-worker liveness: one bounded RPC each, False on any failure.
+
+        Safe to call concurrently with query traffic: ``call`` holds the
+        per-connection lock across its send+recv pair, so a ping can wait
+        behind an in-flight exchange but never interleave with it. A
+        failed ping closes the (now desynced) stream; a best-effort
+        reconnect repairs it so one slow probe does not take a live
+        worker out of rotation.
+        """
         out = {}
         for h in self.handles:
             try:
-                h.conn.call("ping")
+                h.conn.call("ping", timeout_s=min(timeout_s, h.conn.timeout_s))
                 out[h.name] = True
             except (WorkerUnavailable, RuntimeError):
                 out[h.name] = False
+                try:
+                    h.conn.reconnect()
+                except WorkerUnavailable:
+                    pass
         return out
 
     def close(self) -> None:

@@ -14,11 +14,20 @@ the wire (workers never deserialize executable state).
 
 :class:`WorkerConnection` is the client side: per-call timeouts, and every
 transport-level failure (refused/reset connection, EOF from a dead process,
-a timeout) raises the typed
+a timeout, a corrupt frame) raises the typed
 :class:`~repro.serving.admission.WorkerUnavailable` so callers get a
-bounded, classifiable failure instead of a hang. A worker that *replied*
-with an application error raises :class:`RemoteError` instead — the worker
-is alive, the request was bad.
+bounded, classifiable failure instead of a hang. Any such failure also
+closes the socket — a failure mid-frame leaves the byte stream desynced,
+so the connection must be re-established (:meth:`WorkerConnection.reconnect`)
+before it can carry another call. A worker that *replied* with an
+application error raises :class:`RemoteError` instead — the worker is
+alive and the stream is intact, the request was bad.
+
+The protocol is strict request→reply on one stream, so all socket use is
+serialized through a per-connection :class:`threading.RLock`: ``call``
+holds it across its send+recv pair, and fleet fan-outs hold it across a
+whole exchange — a concurrent health-check ping can never interleave its
+frames with an in-flight beam exchange.
 """
 
 from __future__ import annotations
@@ -26,6 +35,7 @@ from __future__ import annotations
 import json
 import socket
 import struct
+import threading
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,7 +46,9 @@ _LEN = struct.Struct(">Q")   # frame length
 _HLEN = struct.Struct(">I")  # header length
 
 #: Refuse frames beyond this (a corrupt length prefix must not OOM us).
-MAX_FRAME_BYTES = 1 << 33
+#: Per-level beams are KiB; the largest legitimate frame is one partition's
+#: sliced layers in ``load``, comfortably under 2 GiB at paper scale.
+MAX_FRAME_BYTES = 1 << 31
 
 
 class RemoteError(RuntimeError):
@@ -104,32 +116,78 @@ class WorkerConnection:
         self, host: str, port: int, *, timeout_s: float = 60.0,
         name: Optional[str] = None,
     ) -> None:
+        self.host = host
+        self.port = port
         self.name = name or f"{host}:{port}"
         self.timeout_s = timeout_s
+        #: Serializes all socket use; held across each send+recv pair (see
+        #: module docstring). Reentrant so ``call`` and fleet-level exchange
+        #: locking compose.
+        self.lock = threading.RLock()
+        self._sock: Optional[socket.socket] = self._connect()
+
+    def _connect(self) -> socket.socket:
         try:
-            self._sock = socket.create_connection((host, port), timeout=timeout_s)
-            self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            sock = socket.create_connection(
+                (self.host, self.port), timeout=self.timeout_s
+            )
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return sock
         except OSError as exc:
             raise WorkerUnavailable(self.name, "connect", str(exc)) from exc
+
+    def reconnect(self) -> None:
+        """Replace the stream with a fresh one (drops any buffered replies).
+
+        Used after an abandoned or failed exchange: the old stream may be
+        desynced mid-frame or carry a stale reply that the next call would
+        consume as its own. Workers keep their loaded partition across
+        client connections, so a reconnect is cheap and state-preserving.
+        """
+        with self.lock:
+            self.close()
+            self._sock = self._connect()
 
     def send(
         self, op: str, header: Optional[dict] = None,
         arrays: Sequence[np.ndarray] = (),
+        timeout_s: Optional[float] = None,
     ) -> None:
         msg = dict(header or {})
         msg["op"] = op
-        try:
-            self._sock.settimeout(self.timeout_s)
-            send_frame(self._sock, msg, arrays)
-        except (OSError, EOFError) as exc:
-            raise WorkerUnavailable(self.name, op, str(exc)) from exc
+        with self.lock:
+            sock = self._sock
+            if sock is None:
+                raise WorkerUnavailable(self.name, op, "connection closed")
+            try:
+                sock.settimeout(self.timeout_s if timeout_s is None
+                                else timeout_s)
+                send_frame(sock, msg, arrays)
+            except (OSError, EOFError) as exc:
+                self.close()  # partial write: stream desynced
+                raise WorkerUnavailable(self.name, op, str(exc)) from exc
 
-    def recv(self, op: str = "reply") -> Tuple[dict, List[np.ndarray]]:
-        try:
-            self._sock.settimeout(self.timeout_s)
-            header, arrays = recv_frame(self._sock)
-        except (OSError, EOFError, socket.timeout) as exc:
-            raise WorkerUnavailable(self.name, op, str(exc)) from exc
+    def recv(
+        self, op: str = "reply", timeout_s: Optional[float] = None,
+    ) -> Tuple[dict, List[np.ndarray]]:
+        with self.lock:
+            sock = self._sock
+            if sock is None:
+                raise WorkerUnavailable(self.name, op, "connection closed")
+            try:
+                sock.settimeout(self.timeout_s if timeout_s is None
+                                else timeout_s)
+                header, arrays = recv_frame(sock)
+            except (OSError, EOFError, socket.timeout) as exc:
+                self.close()  # mid-frame: stream desynced until reconnect
+                raise WorkerUnavailable(self.name, op, str(exc)) from exc
+            except (ValueError, KeyError, TypeError, struct.error) as exc:
+                # Oversized/corrupt length prefix, malformed JSON header, or
+                # a bad array descriptor: the stream position is unknowable.
+                self.close()
+                raise WorkerUnavailable(
+                    self.name, op, f"corrupt frame: {exc}"
+                ) from exc
         if not header.get("ok", False):
             raise RemoteError(
                 f"worker {self.name} failed {op!r}: "
@@ -140,12 +198,18 @@ class WorkerConnection:
     def call(
         self, op: str, header: Optional[dict] = None,
         arrays: Sequence[np.ndarray] = (),
+        timeout_s: Optional[float] = None,
     ) -> Tuple[dict, List[np.ndarray]]:
-        self.send(op, header, arrays)
-        return self.recv(op)
+        with self.lock:  # no foreign frame between our send and our recv
+            self.send(op, header, arrays, timeout_s)
+            return self.recv(op, timeout_s)
 
     def close(self) -> None:
-        try:
-            self._sock.close()
-        except OSError:
-            pass
+        # Lockless on purpose: kill paths must be able to close the socket
+        # out from under a blocked recv in another thread.
+        sock, self._sock = self._sock, None
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass

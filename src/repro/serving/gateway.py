@@ -9,7 +9,10 @@ behind three endpoints:
   derived from its status: 200 ok, 429 overloaded, 504 deadline exceeded,
   503 worker unavailable, 400 invalid, 500 internal.
 * ``GET /healthz`` — 200 when serving; with a fleet attached, pings every
-  worker (bounded RPC) and degrades to 503 listing the dead ones.
+  worker (bounded RPC) and degrades to 503 listing the dead ones. Pings
+  are serialized with in-flight beam exchanges by the per-connection RPC
+  lock, so an LB probe landing mid-query can never interleave frames with
+  the dispatch thread on a worker socket.
 * ``GET /metrics`` — :meth:`ServerMetrics.summary` as JSON.
 
 The float32 scores survive the JSON round trip bit-for-bit (see

@@ -11,6 +11,8 @@ cheap in-process engine so the contract is exercised without subprocesses.
 """
 
 import json
+import socket
+import struct
 import threading
 import time
 import urllib.error
@@ -252,6 +254,180 @@ def test_gateway_rejects_bad_requests(small_setup):
         # healthz without a fleet
         code, doc = _get(gw.url, "/healthz")
         assert code == 200 and "workers" not in doc
+
+
+# ---------------------------------------------------------------------------
+# RPC failure semantics: locking, poisoning, corrupt frames, orphan reaping
+# ---------------------------------------------------------------------------
+
+class _FakeWorker:
+    """Minimal frame server speaking the fleet RPC protocol.
+
+    Replies to every op with ``{"ok": True, "op": <op>, "seq": <n>}`` where
+    ``seq`` counts requests *served* — letting tests detect a stale reply
+    being consumed as a fresh one. ``{"sleep": s}`` in a request header
+    delays the reply past a client timeout. Like the real worker, it goes
+    back to ``accept()`` when a client connection drops.
+    """
+
+    def __init__(self):
+        from repro.serving.fleet.rpc import recv_frame, send_frame
+
+        self._recv_frame, self._send_frame = recv_frame, send_frame
+        self.srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self.srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self.srv.bind(("127.0.0.1", 0))
+        self.srv.listen(4)
+        self.port = self.srv.getsockname()[1]
+        self.seq = 0
+        self.thread = threading.Thread(target=self._serve, daemon=True)
+        self.thread.start()
+
+    def _serve(self):
+        while True:
+            try:
+                conn, _ = self.srv.accept()
+            except OSError:
+                return  # server closed
+            try:
+                while True:
+                    header, _ = self._recv_frame(conn)
+                    delay = float(header.get("sleep", 0.0))
+                    if delay:
+                        time.sleep(delay)
+                    seq, self.seq = self.seq, self.seq + 1
+                    self._send_frame(
+                        conn,
+                        {"ok": True, "op": header.get("op"), "seq": seq},
+                        [np.asarray([seq], np.int64)] * 2,
+                    )
+            except (EOFError, OSError):
+                pass
+            finally:
+                conn.close()
+
+    def close(self):
+        try:
+            self.srv.close()
+        except OSError:
+            pass
+
+
+def test_rpc_corrupt_frame_is_typed_and_closes_connection():
+    from repro.serving.admission import WorkerUnavailable
+    from repro.serving.fleet.rpc import MAX_FRAME_BYTES, WorkerConnection
+    from repro.serving.fleet.rpc import recv_frame
+
+    srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+
+    def serve():
+        conn, _ = srv.accept()
+        try:
+            recv_frame(conn)  # consume the client's ping
+            # reply with an absurd length prefix: must be refused, not
+            # allocated
+            conn.sendall(struct.pack(">Q", MAX_FRAME_BYTES + 1))
+            time.sleep(1.0)
+        finally:
+            conn.close()
+            srv.close()
+
+    threading.Thread(target=serve, daemon=True).start()
+    conn = WorkerConnection(
+        "127.0.0.1", srv.getsockname()[1], timeout_s=10.0, name="w0"
+    )
+    with pytest.raises(WorkerUnavailable, match="corrupt frame"):
+        conn.call("ping")
+    # the desynced stream was closed: further use fails fast and typed
+    with pytest.raises(WorkerUnavailable, match="connection closed"):
+        conn.send("ping")
+    with pytest.raises(WorkerUnavailable, match="connection closed"):
+        conn.recv("ping")
+
+
+def test_rpc_lock_serializes_concurrent_callers():
+    """Health-check pings racing query traffic must not interleave frames."""
+    from repro.serving.fleet.rpc import WorkerConnection
+
+    w = _FakeWorker()
+    conn = WorkerConnection("127.0.0.1", w.port, timeout_s=30.0, name="w0")
+    errors = []
+
+    def hammer(op, n):
+        try:
+            for _ in range(n):
+                header, arrays = conn.call(op)
+                assert header["op"] == op, f"{op} got {header['op']} reply"
+                assert len(arrays) == 2
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=hammer, args=(op, 50))
+               for op in ("begin", "ping", "step")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    conn.close()
+    w.close()
+    assert not errors, errors
+
+
+def test_fanout_failure_resets_streams_no_stale_replies():
+    """A mid-exchange timeout must poison the fleet's streams: the next
+    exchange gets fresh replies, never the abandoned batch's buffered one
+    (identical shape — would be silently wrong, not an error)."""
+    from repro.serving.admission import WorkerUnavailable
+    from repro.serving.fleet import PartitionFleet, WorkerHandle
+    from repro.serving.fleet.rpc import WorkerConnection
+
+    a, b = _FakeWorker(), _FakeWorker()
+    fleet = PartitionFleet([
+        WorkerHandle(WorkerConnection(
+            "127.0.0.1", w.port, timeout_s=1.0, name=f"w{i}"
+        ))
+        for i, w in enumerate((a, b))
+    ])
+    # worker0 exceeds the per-call timeout; worker1 replies promptly, so its
+    # seq-0 reply is left buffered on the abandoned stream
+    with pytest.raises(WorkerUnavailable):
+        fleet._exchange("echo", [{"sleep": 1.5}, {}], [[], []])
+    time.sleep(1.2)  # let worker0 finish the abandoned request + re-accept
+    replies = fleet._exchange("echo", [{}, {}], [[], []])
+    assert [h["seq"] for h, _ in replies] == [1, 1], (
+        "stale reply from the aborted exchange was consumed"
+    )
+    for h in fleet.handles:
+        h.conn.close()
+    a.close()
+    b.close()
+
+
+def test_launch_workers_reaps_all_procs_on_failure(monkeypatch):
+    """A failure at worker i must not orphan procs i..n-1."""
+    import repro.serving.fleet.launcher as launcher_mod
+    from repro.serving.admission import WorkerUnavailable
+
+    spawned = []
+    real_popen = launcher_mod.subprocess.Popen
+
+    def tracking_popen(*args, **kwargs):
+        proc = real_popen(*args, **kwargs)
+        spawned.append(proc)
+        return proc
+
+    def failing_announce(proc, timeout_s, name):
+        raise WorkerUnavailable(name, "launch", "forced announce failure")
+
+    monkeypatch.setattr(launcher_mod.subprocess, "Popen", tracking_popen)
+    monkeypatch.setattr(launcher_mod, "_read_announce", failing_announce)
+    with pytest.raises(WorkerUnavailable):
+        launcher_mod.launch_workers(3)
+    assert len(spawned) == 3
+    for proc in spawned:
+        assert proc.poll() is not None, "worker process orphaned"
 
 
 def test_gateway_after_shutdown_is_unavailable(small_setup):
