@@ -15,7 +15,16 @@ the CI-size tree:
   rate against a bounded admission queue, reporting the HTTP status mix
   (200/429/504) the edge actually answered with.
 
-Run: ``python -m benchmarks.bench_gateway [--n 64] [--partitions 2]``
+``--chaos`` (ISSUE 7) runs the fault-injection leg instead: sustained HTTP
+load through a supervised P=2 fleet, SIGKILL one worker mid-flight, and
+measure time-to-recovery plus the ok/degraded/failed response mix. Its row
+carries two structural flags ``check_regression`` gates hard:
+``recovery_bounded`` (the supervisor respawned + re-shipped the worker
+within the bound, with zero failed responses) and ``degraded_parity``
+(every degraded response excluded the dead label range and matched the
+full-fleet reference bitwise on the labels they share).
+
+Run: ``python -m benchmarks.bench_gateway [--n 64] [--partitions 2] [--chaos]``
 """
 
 from __future__ import annotations
@@ -35,6 +44,7 @@ from repro.data.xmr_data import PAPER_SHAPES, benchmark_queries, scaled_shape
 from repro.serving import (
     AdmissionConfig,
     BatchPolicy,
+    FleetConfig,
     MicroBatcher,
     PartitionConfig,
     Query,
@@ -42,7 +52,7 @@ from repro.serving import (
     ServingGateway,
     XMRServingEngine,
 )
-from repro.serving.fleet import PartitionFleet
+from repro.serving.fleet import FleetSupervisor, PartitionFleet
 
 
 def _post(url: str, doc: dict, timeout: float = 300.0):
@@ -198,6 +208,139 @@ def run(
     return lines
 
 
+def run_chaos(
+    *,
+    n_queries: int = 64,
+    max_batch: int = 8,
+    max_wait_ms: float = 2.0,
+    max_labels: int = 4096,
+    seed: int = 0,
+    recovery_bound_s: float = 60.0,
+) -> List[str]:
+    """Kill a worker under open-loop load; measure recovery + response mix."""
+    shape = PAPER_SHAPES["eurlex-4k"]
+    if shape.L > max_labels:
+        shape = scaled_shape(shape, max_labels / shape.L)
+    rng = np.random.default_rng(seed)
+    tree = build_benchmark_tree(shape, 16, rng)
+    queries = benchmark_queries(shape, n_queries, rng)
+    nq = queries.shape[0]
+
+    # Full-fleet reference (== in-process by the house contract): the
+    # bitwise anchor for both degraded and post-recovery responses.
+    ref_engine = XMRServingEngine(
+        tree, ServeConfig(ell_width=256, max_batch=max(64, max_batch)))
+    ref_s, ref_l = ref_engine.serve_batch(queries)
+    ref_maps = [
+        {int(ref_l[i, k]): int(ref_s[i].view(np.uint32)[k])
+         for k in range(ref_l.shape[1])}
+        for i in range(nq)
+    ]
+
+    engine = XMRServingEngine(
+        tree,
+        ServeConfig(
+            ell_width=256, max_batch=max(64, max_batch),
+            partition=PartitionConfig(partitions=2,
+                                      partition_sync="pipelined"),
+            fleet=FleetConfig(
+                degraded_policy="serve_partial", poll_interval_s=0.1,
+                ping_timeout_s=5.0, suspect_after=1,
+                backoff_base_s=0.1, restart_budget=5,
+            ),
+        ),
+    )
+
+    results: list = []   # (t, code, doc)
+    errors: list = []
+    lock = threading.Lock()
+    stop = threading.Event()
+    with PartitionFleet.launch(2, rpc_timeout_s=300.0) as fleet:
+        fleet.attach(engine)
+        dead_lo = int(engine.index.manifest.partitions[0].label_start)
+        dead_hi = int(engine.index.manifest.partitions[0].label_end)
+        with FleetSupervisor(fleet, engine.config.fleet) as sup, \
+                MicroBatcher(engine, BatchPolicy(max_batch, max_wait_ms)) \
+                as mb, ServingGateway(mb, fleet=fleet) as gw:
+
+            def client(tid):
+                i = 0
+                while not stop.is_set():
+                    qi = (tid + 3 * i) % nq
+                    i += 1
+                    idx, val = queries.row(qi)
+                    try:
+                        code, doc = _post(
+                            gw.url, Query(idx=idx, val=val, qid=qi).to_wire(),
+                            timeout=60.0)
+                    except Exception as exc:  # a hang/refused conn is a fail
+                        with lock:
+                            errors.append(repr(exc))
+                        return
+                    with lock:
+                        results.append((time.monotonic(), code, doc))
+
+            threads = [threading.Thread(target=client, args=(t,), daemon=True)
+                       for t in range(3)]
+            for t in threads:
+                t.start()
+            deadline = time.monotonic() + 60.0
+            while time.monotonic() < deadline:
+                with lock:
+                    if len(results) >= 8:
+                        break
+                time.sleep(0.05)
+
+            t_kill = time.monotonic()
+            fleet.handles[0].proc.kill()  # SIGKILL mid-flight
+            recovery_s = float("inf")
+            while time.monotonic() < t_kill + recovery_bound_s:
+                st = sup.states()["worker0"]
+                if st["state"] == "up" and st["restarts"] >= 1 \
+                        and not fleet.down_pids():
+                    recovery_s = time.monotonic() - t_kill
+                    break
+                time.sleep(0.05)
+            restarts = sup.states()["worker0"]["restarts"]
+            time.sleep(1.0)  # collect post-recovery traffic
+            stop.set()
+            for t in threads:
+                t.join(timeout=120)
+
+    ok = sum(1 for _, c, d in results if c == 200 and not d.get("degraded"))
+    degraded = sum(1 for _, c, d in results
+                   if c == 200 and d.get("degraded"))
+    failed = len(errors) + sum(1 for _, c, _ in results if c != 200)
+
+    parity = degraded > 0  # the kill must actually surface degraded traffic
+    for _, code, doc in results:
+        if code != 200:
+            continue
+        got_s = np.asarray(doc["scores"], np.float32).view(np.uint32)
+        ref_map = ref_maps[doc["qid"]]
+        if doc.get("degraded"):
+            parity = parity and doc["missing_labels"] == [[dead_lo, dead_hi]]
+            for k, label in enumerate(doc["ids"]):
+                label = int(label)
+                parity = parity and not (dead_lo <= label < dead_hi)
+                if label in ref_map:  # shared labels must agree bitwise
+                    parity = parity and int(got_s[k]) == ref_map[label]
+        else:
+            for k, label in enumerate(doc["ids"]):
+                parity = parity and ref_map.get(int(label)) == int(got_s[k])
+
+    bounded = recovery_s <= recovery_bound_s and restarts >= 1 and failed == 0
+    return [
+        csv_line(
+            f"{shape.name}/gateway/gateway-chaos",
+            1e6 * min(recovery_s, recovery_bound_s),  # recovery latency, us
+            f"recovery_s={recovery_s:.2f} restarts={restarts} ok={ok} "
+            f"degraded={degraded} failed={failed} "
+            f"recovery_bounded={bounded} degraded_parity={parity}",
+        )
+    ]
+
+
 def main(argv=None) -> List[str]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=64)
@@ -207,14 +350,25 @@ def main(argv=None) -> List[str]:
     ap.add_argument("--max-labels", type=int, default=4096)
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as a JSON artifact")
+    ap.add_argument("--chaos", action="store_true",
+                    help="fault-injection leg: kill a worker under load, "
+                         "measure recovery + degraded/ok/failed mix")
     args = ap.parse_args(argv)
-    lines = run(
-        n_queries=args.n,
-        partitions=args.partitions,
-        max_batch=args.max_batch,
-        max_wait_ms=args.max_wait_ms,
-        max_labels=args.max_labels,
-    )
+    if args.chaos:
+        lines = run_chaos(
+            n_queries=args.n,
+            max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms,
+            max_labels=args.max_labels,
+        )
+    else:
+        lines = run(
+            n_queries=args.n,
+            partitions=args.partitions,
+            max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms,
+            max_labels=args.max_labels,
+        )
     for line in lines:
         print(line)
     if args.json:

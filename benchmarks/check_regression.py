@@ -58,6 +58,8 @@ STRUCT_FLAGS = (
     "overlap_speedup",             # pipelined >= level throughput, multidevice
     "cache_parity",                # hot-beam cache hit == cold run, bitwise
     "gateway_parity",              # HTTP + fleet RPC == in-process, bitwise
+    "recovery_bounded",            # supervisor respawned within the bound
+    "degraded_parity",             # degraded responses survivor-exact
 )
 
 

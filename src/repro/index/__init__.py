@@ -23,6 +23,7 @@ from repro.index.planner import (
     SYNC_MODES,
     BeamTransport,
     ScatterGatherPlanner,
+    TransportDegraded,
     merge_topk,
     reference_topk_width,
 )
@@ -38,6 +39,7 @@ __all__ = [
     "Placement",
     "SYNC_MODES",
     "ScatterGatherPlanner",
+    "TransportDegraded",
     "default_split_level",
     "partition_tree",
     "place",

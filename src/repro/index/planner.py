@@ -290,6 +290,21 @@ _scatter_dense = jax.jit(mscm_lib.scatter_dense, static_argnums=2)
 SYNC_MODES = ("level", "pipelined", "final")
 
 
+class TransportDegraded(RuntimeError):
+    """A partition was lost mid-exchange but the batch is retryable.
+
+    Raised by a transport whose degraded policy is ``"serve_partial"``
+    after it has removed the lost partition from its live set; the
+    coordinator replays the batch from ``begin`` over the survivors (the
+    workers' per-batch speculation state restarts cleanly at ``begin``).
+    """
+
+    def __init__(self, pid: int, cause: BaseException) -> None:
+        super().__init__(f"partition {pid} lost mid-exchange: {cause}")
+        self.pid = pid
+        self.cause = cause
+
+
 class BeamTransport:
     """Where the pipelined exchange's partition halves run.
 
@@ -334,6 +349,15 @@ class BeamTransport:
     ) -> List[Tuple[np.ndarray, np.ndarray]]:
         raise NotImplementedError
 
+    def down_partitions(self) -> List[int]:
+        """Partitions excluded from the current batch (degraded mode).
+
+        Default: none. A degraded-capable transport returns the pids whose
+        beams were missing from the batch it just served, so the
+        coordinator can stamp the result with the unsearched label ranges.
+        """
+        return []
+
 
 class ScatterGatherPlanner:
     """Executes partitioned queries; see the module docstring for the path.
@@ -365,6 +389,10 @@ class ScatterGatherPlanner:
         if transport is not None:
             self._check_transport(sync, cache_entries, transport)
             self.transport = transport
+        #: Degraded-batch info from the most recent :meth:`infer` over a
+        #: transport: ``None`` when every partition participated, else
+        #: ``{"partitions": [pid, ...], "label_ranges": [(lo, hi), ...]}``.
+        self.last_degraded: Optional[dict] = None
         self.index = index
         self.beam = beam
         self.topk = topk
@@ -443,6 +471,41 @@ class ScatterGatherPlanner:
 
     def _infer_transport(self, x_idx, x_val, parent_ids, scores):
         """Coordinator half of the pipelined exchange over a transport.
+
+        If the transport loses a partition mid-exchange and its policy
+        allows partial service, it raises :class:`TransportDegraded` after
+        shrinking its live set; the whole batch is replayed over the
+        survivors. The loop is bounded: every replay follows the permanent
+        loss of at least one partition. Degraded merges stay bitwise-exact
+        for surviving-partition labels: each survivor's local beam is
+        already merge-width wide (``k = min(next_b, b·B)`` equals the
+        coordinator's width recurrence), and a path's score is a
+        deterministic chain independent of which other candidates shared
+        the beam — dropping a partition only frees panel slots, it cannot
+        perturb any survivor's bits.
+        """
+        while True:
+            try:
+                w_scores, w_ids = self._transport_exchange(
+                    x_idx, x_val, parent_ids, scores
+                )
+                break
+            except TransportDegraded:
+                continue  # replay over the survivors
+        down = sorted(self.transport.down_partitions())
+        if down:
+            infos = self.index.manifest.partitions
+            self.last_degraded = {
+                "partitions": down,
+                "label_ranges": [
+                    (int(infos[p].label_start), int(infos[p].label_end))
+                    for p in down
+                ],
+            }
+        return w_scores, w_ids
+
+    def _transport_exchange(self, x_idx, x_val, parent_ids, scores):
+        """One full begin/step/merge pass over the transport.
 
         Same width/level recurrence as :meth:`_infer_pipelined`; the
         partitions' reconcile/select/speculate halves run behind
@@ -532,6 +595,7 @@ class ScatterGatherPlanner:
         self, x_idx: jax.Array, x_val: jax.Array
     ) -> Tuple[jax.Array, jax.Array]:
         """Global (scores [n, k], labels [n, k]) for a query batch."""
+        self.last_degraded = None
         scores, parent_ids = self._route(x_idx, x_val)
         if self.transport is not None:
             return self._infer_transport(x_idx, x_val, parent_ids, scores)

@@ -28,7 +28,12 @@ from repro.serving.batcher import (
     RequestQueue,
     StreamResult,
 )
-from repro.serving.config import AdmissionConfig, PartitionConfig, ServeConfig
+from repro.serving.config import (
+    AdmissionConfig,
+    FleetConfig,
+    PartitionConfig,
+    ServeConfig,
+)
 from repro.serving.engine import XMRServingEngine, resolve_method
 from repro.serving.gateway import ServingGateway
 from repro.serving.metrics import LatencyStats, ServerMetrics
@@ -36,6 +41,7 @@ from repro.serving.metrics import LatencyStats, ServerMetrics
 __all__ = [
     # configuration
     "AdmissionConfig",
+    "FleetConfig",
     "PartitionConfig",
     "ServeConfig",
     # engine + front end

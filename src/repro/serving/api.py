@@ -143,6 +143,13 @@ class QueryResult:
     failure (see :data:`HTTP_STATUS`), ``ids``/``scores`` are None, and
     ``error`` (in-process only; never on the wire) holds the exception.
     ``timing`` carries wall-clock milliseconds (``e2e_ms`` at minimum).
+
+    ``degraded`` marks a *successful* partial result: one or more
+    partitions were down, the ranking covers only the surviving label
+    ranges (scores for those labels are still bitwise-exact), and
+    ``missing_labels`` lists the unsearched ``[lo, hi)`` global label
+    ranges. Degraded results keep ``status == "ok"`` / HTTP 200 — the
+    request did not fail, the index was partially unavailable.
     """
 
     qid: int
@@ -152,6 +159,8 @@ class QueryResult:
     timing: dict = dataclasses.field(default_factory=dict)
     error: Optional[BaseException] = None
     detail: str = ""
+    degraded: bool = False
+    missing_labels: list = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
@@ -190,6 +199,11 @@ class QueryResult:
         if self.ok:
             doc["ids"] = [int(i) for i in np.asarray(self.ids)]
             doc["scores"] = [float(s) for s in np.asarray(self.scores)]
+            if self.degraded:
+                doc["degraded"] = True
+                doc["missing_labels"] = [
+                    [int(lo), int(hi)] for lo, hi in self.missing_labels
+                ]
         else:
             doc["detail"] = self.detail
         return doc
@@ -207,6 +221,11 @@ class QueryResult:
                 status=status,
                 timing=dict(doc.get("timing", {})),
                 detail=str(doc.get("detail", "")),
+                degraded=bool(doc.get("degraded", False)),
+                missing_labels=[
+                    (int(lo), int(hi))
+                    for lo, hi in doc.get("missing_labels", [])
+                ],
             )
         except (KeyError, TypeError, ValueError) as exc:
             raise WireError(f"QueryResult: malformed document ({exc})") from exc

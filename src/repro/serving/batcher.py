@@ -159,6 +159,10 @@ class _InFlight:
     t_dequeue: float
     bucket: int
     trigger: str
+    # Snapshot of engine.last_degraded() taken at dispatch: the planner's
+    # attribute is per-dispatch mutable state, and double-buffering means
+    # the *next* batch dispatches before this one finalizes.
+    degraded: Optional[dict] = None
 
 
 def _device_ready(inflight: _InFlight) -> bool:
@@ -322,9 +326,14 @@ class MicroBatcher:
                     out.set_result(QueryResult.from_error(qid, exc, timing))
                 else:
                     s, l = f.result()
-                    out.set_result(
-                        QueryResult(qid=qid, ids=l, scores=s, timing=timing)
-                    )
+                    info = getattr(f, "degraded_info", None)
+                    out.set_result(QueryResult(
+                        qid=qid, ids=l, scores=s, timing=timing,
+                        degraded=info is not None,
+                        missing_labels=(
+                            list(info["label_ranges"]) if info else []
+                        ),
+                    ))
 
             inner.add_done_callback(_wrap)
             return out
@@ -399,7 +408,10 @@ class MicroBatcher:
         bucket = self.engine.bucket_for(len(reqs))
         xi, xv = self.engine.marshal_rows(sub, np.arange(len(reqs)), bucket)
         s, l = self.engine._run(xi, xv)  # async dispatch — do not block here
-        return _InFlight(reqs, s, l, t_dequeue, bucket, trigger)
+        return _InFlight(
+            reqs, s, l, t_dequeue, bucket, trigger,
+            degraded=self.engine.last_degraded(),
+        )
 
     def _try_dispatch(
         self, reqs: List[_Request], trigger: str
@@ -432,7 +444,13 @@ class MicroBatcher:
         leaves = np.asarray(inflight.labels)
         l = self.engine._map_labels(leaves)
         for i, req in enumerate(inflight.reqs):
+            if inflight.degraded is not None:
+                # Attribute channel to the v1 wrapper: set before
+                # set_result because done-callbacks fire synchronously.
+                req.future.degraded_info = inflight.degraded
             req.future.set_result((s[i], l[i]))
+        if inflight.degraded is not None:
+            self.metrics.record_degraded(len(inflight.reqs))
         # Partition occupancy uses raw leaves (pre-label_perm) and only the
         # real rows — bucket padding tails are sentinel junk.
         hits = self.engine.partition_hit_counts(leaves[: len(inflight.reqs)])

@@ -56,11 +56,52 @@ class PartitionConfig:
     beam_cache: int = 0                    # hot-beam LRU entries (0 = off)
 
 
+#: Valid :attr:`FleetConfig.degraded_policy` values.
+DEGRADED_POLICIES = ("serve_partial", "reject")
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """Cross-process fleet resilience: degraded serving + supervision.
+
+    ``degraded_policy`` decides what a partition loss mid-query means:
+
+    * ``"serve_partial"`` (default) — complete the beam exchange over the
+      surviving partitions and stamp the result ``degraded`` with the
+      unsearched label ranges; survivor scores stay bitwise-exact.
+    * ``"reject"`` — fail the query with a typed ``worker_unavailable``
+      (the pre-supervision behavior).
+
+    The remaining knobs tune :class:`~repro.serving.fleet.FleetSupervisor`:
+    how often it sweeps the fleet, how long one liveness probe may take,
+    how many consecutive failed probes turn ``SUSPECT`` into a restart, and
+    the exponential backoff / attempt budget of the respawn loop.
+    """
+
+    degraded_policy: str = "serve_partial"
+    poll_interval_s: float = 0.5   # supervisor sweep cadence
+    ping_timeout_s: float = 2.0    # per-worker probe bound
+    suspect_after: int = 2         # failed probes before a restart
+    backoff_base_s: float = 0.25   # delay after the first failed respawn
+    backoff_max_s: float = 10.0    # backoff doubles up to this cap
+    restart_budget: int = 5        # respawn attempts before FAILED
+
+    def __post_init__(self) -> None:
+        if self.degraded_policy not in DEGRADED_POLICIES:
+            raise ValueError(
+                f"degraded_policy={self.degraded_policy!r}; choose from "
+                f"{DEGRADED_POLICIES}"
+            )
+
+
 _ADMISSION_FIELDS = frozenset(
     f.name for f in dataclasses.fields(AdmissionConfig)
 )
 _PARTITION_FIELDS = frozenset(
     f.name for f in dataclasses.fields(PartitionConfig)
+)
+_FLEET_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(FleetConfig)
 )
 
 
@@ -82,6 +123,7 @@ class ServeConfig:
     partition: PartitionConfig = dataclasses.field(
         default_factory=PartitionConfig
     )
+    fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
 
     def __init__(
         self,
@@ -95,6 +137,7 @@ class ServeConfig:
         shards: int = 1,
         admission: AdmissionConfig | None = None,
         partition: PartitionConfig | None = None,
+        fleet: FleetConfig | None = None,
         **flat,
     ) -> None:
         self.beam = beam
@@ -107,19 +150,23 @@ class ServeConfig:
         self.shards = shards
         self.admission = admission if admission is not None else AdmissionConfig()
         self.partition = partition if partition is not None else PartitionConfig()
+        self.fleet = fleet if fleet is not None else FleetConfig()
         if flat:
             adm = {k: v for k, v in flat.items() if k in _ADMISSION_FIELDS}
             prt = {k: v for k, v in flat.items() if k in _PARTITION_FIELDS}
-            unknown = set(flat) - set(adm) - set(prt)
+            flt = {k: v for k, v in flat.items() if k in _FLEET_FIELDS}
+            unknown = set(flat) - set(adm) - set(prt) - set(flt)
             if unknown:
                 raise TypeError(
                     f"ServeConfig got unexpected keyword argument(s) "
                     f"{sorted(unknown)}"
                 )
             warnings.warn(
-                f"flat ServeConfig kwarg(s) {sorted(adm) + sorted(prt)} are "
+                f"flat ServeConfig kwarg(s) "
+                f"{sorted(adm) + sorted(prt) + sorted(flt)} are "
                 "deprecated; pass admission=AdmissionConfig(...) / "
-                "partition=PartitionConfig(...) instead",
+                "partition=PartitionConfig(...) / fleet=FleetConfig(...) "
+                "instead",
                 DeprecationWarning,
                 stacklevel=2,
             )
@@ -128,6 +175,8 @@ class ServeConfig:
                 self.admission = dataclasses.replace(self.admission, **adm)
             if prt:
                 self.partition = dataclasses.replace(self.partition, **prt)
+            if flt:
+                self.fleet = dataclasses.replace(self.fleet, **flt)
 
     # -- flat read-side forwarding (pre-v1 call sites) ----------------------
     @property
@@ -157,3 +206,7 @@ class ServeConfig:
     @property
     def beam_cache(self) -> int:
         return self.partition.beam_cache
+
+    @property
+    def degraded_policy(self) -> str:
+        return self.fleet.degraded_policy

@@ -277,6 +277,19 @@ class XMRServingEngine:
             return None
         return self.planner.cache_stats()
 
+    def last_degraded(self) -> Optional[dict]:
+        """Degraded-batch info from the most recent dispatch.
+
+        ``None`` when every partition served the batch (or the engine is
+        unpartitioned); else ``{"partitions": [...], "label_ranges":
+        [(lo, hi), ...]}`` — see :attr:`ScatterGatherPlanner.last_degraded`.
+        Callers must read this synchronously after the dispatch that
+        produced it (the batcher snapshots it per in-flight batch).
+        """
+        if self.planner is None:
+            return None
+        return getattr(self.planner, "last_degraded", None)
+
     def measure_batch_seconds(self, batch: int, iters: int = 3) -> float:
         """Median wall seconds for one ``batch``-sized dispatch (warmed).
 

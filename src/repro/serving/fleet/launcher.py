@@ -16,6 +16,17 @@ concurrently. Any dead or hung worker surfaces as the typed
 :class:`~repro.serving.admission.WorkerUnavailable` (per-call socket
 timeouts — never a hang), which the batcher turns into failed futures and
 the gateway maps to HTTP 503.
+
+Failure handling: what a dead worker means is a policy choice
+(:attr:`PartitionFleet.degraded_policy`). Under ``"reject"`` every query
+fails typed until the worker returns. Under ``"serve_partial"`` (default)
+a beam exchange that loses a partition marks it down and raises
+:class:`~repro.index.planner.TransportDegraded`; the planner replays the
+batch over the survivors, so the query completes with an explicitly
+degraded, survivor-exact partial ranking. Recovery is the
+:class:`~repro.serving.fleet.supervisor.FleetSupervisor`'s job: it
+respawns the process (:meth:`PartitionFleet.respawn_worker` re-ships the
+partition via the stored load spec) and returns the pid to rotation.
 """
 
 from __future__ import annotations
@@ -25,13 +36,15 @@ import os
 import subprocess
 import sys
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.index.partition import PartitionedIndex
-from repro.index.planner import BeamTransport
+from repro.index.planner import BeamTransport, TransportDegraded
 from repro.serving.admission import WorkerUnavailable
+from repro.serving.config import DEGRADED_POLICIES
 from repro.serving.fleet.rpc import WorkerConnection
 
 
@@ -51,11 +64,28 @@ class WorkerHandle:
     def alive(self) -> bool:
         return self.proc is None or self.proc.poll() is None
 
-    def kill(self) -> None:
-        """Hard-kill the worker process (fault-injection / teardown)."""
-        if self.proc is not None and self.proc.poll() is None:
-            self.proc.kill()
-            self.proc.wait(timeout=30)
+    def kill(self, grace_s: float = 2.0) -> None:
+        """Stop the worker: SIGTERM, a grace window, then SIGKILL; reap.
+
+        The grace period lets the worker exit cleanly (close its listening
+        socket, flush) instead of dying mid-frame; ``grace_s=0`` is an
+        immediate hard kill for fault injection. The process is always
+        reaped — no zombies for the supervisor's liveness poll to misread.
+        """
+        proc = self.proc
+        if proc is not None and proc.poll() is None:
+            if grace_s > 0:
+                proc.terminate()
+                try:
+                    proc.wait(timeout=grace_s)
+                except subprocess.TimeoutExpired:
+                    proc.kill()
+            else:
+                proc.kill()
+            try:
+                proc.wait(timeout=30)
+            except subprocess.TimeoutExpired:
+                pass
         self.conn.close()
 
 
@@ -141,14 +171,74 @@ def launch_workers(
     return handles
 
 
+def partition_payload(
+    index: PartitionedIndex,
+    pid: int,
+    *,
+    beam: int,
+    topk: int,
+    method: str,
+    score_mode: str = "prod",
+    qt: int = 8,
+) -> Tuple[dict, List[np.ndarray]]:
+    """One partition's ``load`` wire payload (header + flattened layers).
+
+    This is exactly what :meth:`PartitionFleet.load` ships to worker
+    ``pid`` — shared so the supervisor's re-ship path and in-process
+    :class:`~repro.serving.fleet.worker.PartitionRunner` tests build
+    bit-identical worker state.
+    """
+    part = index.parts[pid]
+    info = index.manifest.partitions[pid]
+    header = {
+        "pid": info.pid,
+        "level": index.level,
+        "n_cols": list(index.n_cols),
+        "branching": list(index.branching),
+        "d": index.d,
+        "chunk_start": info.chunk_start,
+        "beam": beam, "topk": topk, "method": method,
+        "score_mode": score_mode, "qt": qt,
+        "part_n_cols": list(part.n_cols),
+    }
+    arrays = [
+        np.asarray(t)
+        for lay in part.layers
+        for t in (lay.chunk_rows, lay.chunk_vals, lay.col_rows, lay.col_vals)
+    ]
+    return header, arrays
+
+
 class PartitionFleet(BeamTransport):
     """Cross-process partition workers behind the planner's transport API."""
 
-    def __init__(self, handles: Sequence[WorkerHandle]) -> None:
+    def __init__(
+        self,
+        handles: Sequence[WorkerHandle],
+        *,
+        degraded_policy: str = "serve_partial",
+    ) -> None:
         if not handles:
             raise ValueError("a fleet needs at least one worker")
+        if degraded_policy not in DEGRADED_POLICIES:
+            raise ValueError(
+                f"degraded_policy={degraded_policy!r}; choose from "
+                f"{DEGRADED_POLICIES}"
+            )
         self.handles = list(handles)
         self._closed = False
+        self.degraded_policy = degraded_policy
+        #: Set by :meth:`FleetSupervisor.start`; read by the gateway.
+        self.supervisor = None
+        # Guards the down-set, handle swaps, and batch snapshots. Never
+        # held while a socket is in flight.
+        self._state_lock = threading.Lock()
+        self._down: Set[int] = set()
+        # (pids, handles) snapshotted at begin() so mid-batch supervisor
+        # swaps can't mix a fresh worker into a half-run exchange.
+        self._batch: Optional[Tuple[List[int], List[WorkerHandle]]] = None
+        self._load_spec: Optional[dict] = None
+        self._launch_opts: Optional[dict] = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -160,12 +250,16 @@ class PartitionFleet(BeamTransport):
         env: Optional[dict] = None,
         startup_timeout_s: float = 120.0,
         rpc_timeout_s: float = 120.0,
+        degraded_policy: str = "serve_partial",
     ) -> "PartitionFleet":
         """Spawn ``n`` local worker processes (one per partition)."""
-        return cls(launch_workers(
-            n, host=host, env=env,
+        opts = dict(
+            host=host, env=env,
             startup_timeout_s=startup_timeout_s, rpc_timeout_s=rpc_timeout_s,
-        ))
+        )
+        fleet = cls(launch_workers(n, **opts), degraded_policy=degraded_policy)
+        fleet._launch_opts = opts  # respawn recipe for the supervisor
+        return fleet
 
     @classmethod
     def connect(
@@ -173,6 +267,7 @@ class PartitionFleet(BeamTransport):
         addresses: Sequence[Tuple[str, int]],
         *,
         rpc_timeout_s: float = 120.0,
+        degraded_policy: str = "serve_partial",
     ) -> "PartitionFleet":
         """Attach to already-running workers (the multi-host deployment)."""
         return cls([
@@ -180,7 +275,7 @@ class PartitionFleet(BeamTransport):
                 h, p, timeout_s=rpc_timeout_s, name=f"worker{i}@{h}:{p}"
             ))
             for i, (h, p) in enumerate(addresses)
-        ])
+        ], degraded_policy=degraded_policy)
 
     # -- BeamTransport ------------------------------------------------------
     @property
@@ -242,16 +337,107 @@ class PartitionFleet(BeamTransport):
             for _, reply in self._exchange(op, headers, arrays)
         ]
 
+    # -- degraded-mode state -------------------------------------------------
+    def down_pids(self) -> List[int]:
+        """Partitions currently out of rotation (sorted)."""
+        with self._state_lock:
+            return sorted(self._down)
+
+    def mark_down(self, pid: int) -> None:
+        """Take ``pid`` out of rotation (failed exchange / supervisor)."""
+        with self._state_lock:
+            self._down.add(pid)
+
+    def mark_up(self, pid: int) -> None:
+        """Return ``pid`` to rotation (after a successful respawn+reload)."""
+        with self._state_lock:
+            self._down.discard(pid)
+
+    def down_partitions(self) -> List[int]:
+        """Partitions the *current batch* ran without (planner contract).
+
+        The complement of the begin-time snapshot, not the live down-set:
+        a worker that died *after* this batch's ``begin`` did still
+        contribute its beams, and one the supervisor revived mid-batch did
+        not — the snapshot is what actually served the query.
+        """
+        with self._state_lock:
+            if self._batch is None:
+                return sorted(self._down)
+            in_batch = set(self._batch[0])
+            return [p for p in range(len(self.handles)) if p not in in_batch]
+
+    def _batch_exchange(
+        self, op: str, header: dict, arrays: Sequence[np.ndarray],
+    ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """One beam-protocol fan-out over the batch snapshot.
+
+        Same locking/poisoning discipline as :meth:`_exchange`, but scoped
+        to the handles snapshotted at ``begin`` and failure-attributed: a
+        transport-level loss of one worker under ``"serve_partial"`` marks
+        that pid down and raises
+        :class:`~repro.index.planner.TransportDegraded` so the planner
+        replays the batch over the survivors. Application errors
+        (``RemoteError``) and any failure under ``"reject"`` propagate
+        unchanged — those are the pre-supervision semantics.
+        """
+        with self._state_lock:
+            assert self._batch is not None, f"{op} before begin"
+            pids, handles = self._batch
+        if not pids:
+            raise WorkerUnavailable("fleet", op, "no live partitions")
+        failed_pid: Optional[int] = None
+        for h in handles:
+            h.conn.lock.acquire()
+        try:
+            try:
+                for pid, h in zip(pids, handles):
+                    try:
+                        h.conn.send(op, header, arrays)
+                    except BaseException:
+                        failed_pid = pid
+                        raise
+                replies = []
+                for pid, h in zip(pids, handles):
+                    try:
+                        replies.append(h.conn.recv(op))
+                    except BaseException:
+                        failed_pid = pid
+                        raise
+                return [(reply[0], reply[1]) for _, reply in replies]
+            except BaseException as exc:
+                self._reset_connections()
+                if (
+                    self.degraded_policy == "serve_partial"
+                    and failed_pid is not None
+                    and isinstance(exc, WorkerUnavailable)
+                    and len(pids) > 1
+                ):
+                    self.mark_down(failed_pid)
+                    raise TransportDegraded(failed_pid, exc) from exc
+                raise
+        finally:
+            for h in handles:
+                h.conn.lock.release()
+
     def begin(self, x_idx, x_val, parent_ids, scores):
-        n = self.n_partitions
-        return self._fanout(
-            "begin", [{}] * n, [[x_idx, x_val, parent_ids, scores]] * n
+        with self._state_lock:
+            n = len(self.handles)
+            if self.degraded_policy == "serve_partial":
+                pids = [p for p in range(n) if p not in self._down]
+            else:
+                # reject: always address the full fleet so a dead worker
+                # fails the query typed instead of being silently skipped
+                pids = list(range(n))
+            self._batch = (pids, [self.handles[p] for p in pids])
+        return self._batch_exchange(
+            "begin", {}, [x_idx, x_val, parent_ids, scores]
         )
 
     def step(self, level, winner_ids):
-        n = self.n_partitions
-        return self._fanout("step", [{"level": int(level)}] * n,
-                            [[winner_ids]] * n)
+        return self._batch_exchange(
+            "step", {"level": int(level)}, [winner_ids]
+        )
 
     # -- loading / attaching ------------------------------------------------
     def load(
@@ -270,27 +456,40 @@ class PartitionFleet(BeamTransport):
                 f"index has {index.n_partitions} partitions, fleet has "
                 f"{self.n_partitions} workers"
             )
-        headers = []
-        arrays = []
-        for part, info in zip(index.parts, index.manifest.partitions):
-            headers.append({
-                "pid": info.pid,
-                "level": index.level,
-                "n_cols": list(index.n_cols),
-                "branching": list(index.branching),
-                "d": index.d,
-                "chunk_start": info.chunk_start,
-                "beam": beam, "topk": topk, "method": method,
-                "score_mode": score_mode, "qt": qt,
-                "part_n_cols": list(part.n_cols),
-            })
-            arrays.append([
-                np.asarray(t)
-                for lay in part.layers
-                for t in (lay.chunk_rows, lay.chunk_vals,
-                          lay.col_rows, lay.col_vals)
-            ])
-        self._exchange("load", headers, arrays)
+        self._load_spec = dict(
+            index=index, beam=beam, topk=topk, method=method,
+            score_mode=score_mode, qt=qt,
+        )
+        payloads = [
+            partition_payload(
+                index, pid, beam=beam, topk=topk, method=method,
+                score_mode=score_mode, qt=qt,
+            )
+            for pid in range(index.n_partitions)
+        ]
+        self._exchange(
+            "load", [h for h, _ in payloads], [a for _, a in payloads]
+        )
+
+    def load_worker(self, pid: int, handle: Optional[WorkerHandle] = None):
+        """Re-ship partition ``pid`` to one worker (the supervisor's path).
+
+        ``handle`` lets the supervisor load a freshly spawned worker before
+        swapping it into rotation; default is the current ``handles[pid]``.
+        """
+        if self._load_spec is None:
+            raise RuntimeError("load_worker before load/attach")
+        header, arrays = partition_payload(
+            self._load_spec["index"], pid,
+            beam=self._load_spec["beam"], topk=self._load_spec["topk"],
+            method=self._load_spec["method"],
+            score_mode=self._load_spec["score_mode"],
+            qt=self._load_spec["qt"],
+        )
+        if handle is None:
+            with self._state_lock:
+                handle = self.handles[pid]
+        handle.conn.call("load", header, arrays)
 
     def attach(self, engine) -> "PartitionFleet":
         """Serve ``engine``'s partitions from this fleet's workers.
@@ -304,6 +503,15 @@ class PartitionFleet(BeamTransport):
         if engine.planner is None:
             raise ValueError("engine is unpartitioned; nothing to serve remotely")
         c = engine.config
+        fleet_cfg = getattr(c, "fleet", None)
+        if fleet_cfg is not None:
+            # the config knob is authoritative once an engine is attached
+            if fleet_cfg.degraded_policy not in DEGRADED_POLICIES:
+                raise ValueError(
+                    f"degraded_policy={fleet_cfg.degraded_policy!r}; choose "
+                    f"from {DEGRADED_POLICIES}"
+                )
+            self.degraded_policy = fleet_cfg.degraded_policy
         engine.planner.set_transport(self)
         self.load(
             engine.index,
@@ -313,28 +521,93 @@ class PartitionFleet(BeamTransport):
         engine.fleet = self
         return self
 
+    # -- supervised recovery -------------------------------------------------
+    def respawn_worker(self, pid: int) -> WorkerHandle:
+        """Replace worker ``pid``: new process (or stream), re-shipped
+        partition, then swap into rotation and clear the down mark.
+
+        Locally-launched fleets spawn a fresh process from the stored
+        launch recipe; ``connect()``-attached fleets reconnect to the
+        externally managed address instead. The new worker is fully loaded
+        *before* the swap, so an exchange can never observe a live but
+        empty partition.
+        """
+        with self._state_lock:
+            old = self.handles[pid]
+            opts = self._launch_opts
+        try:
+            old.kill()
+        except Exception:
+            pass  # already dead / unreachable — reap best-effort
+        if opts is not None and old.proc is not None:
+            new = launch_workers(1, **opts)[0]
+            new.name = f"worker{pid}"
+            new.conn.name = new.name
+        else:
+            old.conn.reconnect()  # externally managed worker came back
+            new = old
+        try:
+            if self._load_spec is not None:
+                self.load_worker(pid, handle=new)
+        except BaseException:
+            if new is not old:
+                try:
+                    new.kill()
+                except Exception:
+                    pass
+            raise
+        with self._state_lock:
+            self.handles[pid] = new
+            self._down.discard(pid)
+        return new
+
     # -- health / lifecycle -------------------------------------------------
     def ping(self, timeout_s: float = 5.0) -> Dict[str, bool]:
-        """Per-worker liveness: one bounded RPC each, False on any failure.
+        """Per-worker liveness, probed concurrently; the *whole* sweep is
+        bounded by ``timeout_s`` (one hung worker used to serialize into
+        a P×timeout health check).
 
-        Safe to call concurrently with query traffic: ``call`` holds the
-        per-connection lock across its send+recv pair, so a ping can wait
-        behind an in-flight exchange but never interleave with it. A
-        failed ping closes the (now desynced) stream; a best-effort
-        reconnect repairs it so one slow probe does not take a live
-        worker out of rotation.
+        Each probe first tries the connection lock with the remaining
+        budget: lock-busy means a beam exchange is in flight on that
+        stream, which is proof of life — report process liveness rather
+        than interleave frames. A failed probe closes the (now desynced)
+        stream; a best-effort reconnect repairs it so one slow probe does
+        not take a live worker out of rotation.
         """
-        out = {}
-        for h in self.handles:
+        with self._state_lock:
+            handles = list(self.handles)
+        deadline = time.monotonic() + timeout_s
+        out: Dict[str, bool] = {h.name: False for h in handles}
+
+        def probe(h: WorkerHandle) -> None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return
+            if not h.conn.lock.acquire(timeout=remaining):
+                out[h.name] = h.alive()  # stream busy mid-exchange
+                return
             try:
-                h.conn.call("ping", timeout_s=min(timeout_s, h.conn.timeout_s))
+                h.conn.call(
+                    "ping",
+                    timeout_s=min(timeout_s, h.conn.timeout_s),
+                )
                 out[h.name] = True
             except (WorkerUnavailable, RuntimeError):
-                out[h.name] = False
                 try:
                     h.conn.reconnect()
                 except WorkerUnavailable:
                     pass
+            finally:
+                h.conn.lock.release()
+
+        threads = [
+            threading.Thread(target=probe, args=(h,), daemon=True)
+            for h in handles
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(max(0.0, deadline - time.monotonic()) + 0.1)
         return out
 
     def close(self) -> None:

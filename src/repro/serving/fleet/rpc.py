@@ -28,15 +28,24 @@ serialized through a per-connection :class:`threading.RLock`: ``call``
 holds it across its send+recv pair, and fleet fan-outs hold it across a
 whole exchange — a concurrent health-check ping can never interleave its
 frames with an in-flight beam exchange.
+
+:class:`FaultInjector` is the deterministic chaos seam: a connection built
+with (or assigned) one routes every ``send``/``recv`` through its rules, so
+tests and the chaos benchmark can drop, delay, truncate, or corrupt frames
+— or kill a worker process on exactly the Nth exchange — without races or
+wall-clock guesswork. Production connections carry no injector and pay a
+single ``is None`` check.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import socket
 import struct
 import threading
-from typing import List, Optional, Sequence, Tuple
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -67,9 +76,9 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     return bytes(buf)
 
 
-def send_frame(
-    sock: socket.socket, header: dict, arrays: Sequence[np.ndarray] = ()
-) -> None:
+def encode_frame(header: dict, arrays: Sequence[np.ndarray] = ()) -> bytes:
+    """Serialize one frame to bytes (the exact wire image ``send_frame``
+    writes — also the seam fault injection truncates/corrupts)."""
     arrays = [np.ascontiguousarray(a) for a in arrays]
     header = dict(header)
     header["arrays"] = [
@@ -79,7 +88,13 @@ def send_frame(
     body = len(hbytes) + sum(a.nbytes for a in arrays)
     parts = [_LEN.pack(_HLEN.size + body), _HLEN.pack(len(hbytes)), hbytes]
     parts.extend(a.tobytes() for a in arrays)
-    sock.sendall(b"".join(parts))
+    return b"".join(parts)
+
+
+def send_frame(
+    sock: socket.socket, header: dict, arrays: Sequence[np.ndarray] = ()
+) -> None:
+    sock.sendall(encode_frame(header, arrays))
 
 
 def recv_frame(sock: socket.socket) -> Tuple[dict, List[np.ndarray]]:
@@ -104,6 +119,93 @@ def recv_frame(sock: socket.socket) -> Tuple[dict, List[np.ndarray]]:
     return header, arrays
 
 
+#: Byte-level actions a send-phase rule may return (applied to the frame).
+_FRAME_ACTIONS = ("drop", "truncate", "corrupt")
+
+
+@dataclasses.dataclass
+class FaultRule:
+    """One deterministic fault: *action* on the *nth* matching call.
+
+    ``action``:
+      ``"drop"``      — swallow the frame (the peer never sees it; the
+                        caller's recv times out).
+      ``"truncate"``  — send half the encoded frame, then close the stream
+                        (the peer EOFs mid-frame).
+      ``"corrupt"``   — send the frame with an oversized length prefix (the
+                        peer must reject it without crashing or OOMing).
+      ``"delay"``     — sleep ``seconds`` before the call proceeds.
+      ``"kill"``      — run ``callback`` (e.g. ``handle.kill``) before the
+                        call proceeds: kill-on-Nth-exchange.
+
+    ``phase`` picks the hook point (``"send"`` or ``"recv"``); ``op``
+    restricts to one RPC op (``None`` = any); the rule fires on matching
+    calls ``nth`` through ``nth + count - 1`` (1-based), so "kill on the
+    3rd step" is ``FaultRule("kill", op="step", nth=3, callback=...)``.
+    """
+
+    action: str
+    phase: str = "send"
+    op: Optional[str] = None
+    nth: int = 1
+    count: int = 1
+    seconds: float = 0.0
+    callback: Optional[Callable[[], None]] = None
+    matched: int = 0  # internal: matching calls seen so far
+
+    def __post_init__(self) -> None:
+        if self.action not in _FRAME_ACTIONS + ("delay", "kill"):
+            raise ValueError(f"unknown fault action {self.action!r}")
+        if self.phase not in ("send", "recv"):
+            raise ValueError(f"unknown fault phase {self.phase!r}")
+        if self.action in _FRAME_ACTIONS and self.phase != "send":
+            raise ValueError(f"{self.action!r} faults only apply on send")
+
+
+class FaultInjector:
+    """Deterministic fault plan for one or more :class:`WorkerConnection`.
+
+    Thread-safe: rule counters advance under a lock, so a fleet fan-out
+    hitting the injector from the dispatch thread while a health probe
+    pings through it stays deterministic. Side-effect rules (``delay``,
+    ``kill``) run their effect inside :meth:`fire`; frame-level rules
+    return the action for the connection to apply to the outgoing bytes.
+    """
+
+    def __init__(self, *rules: FaultRule) -> None:
+        self._rules: List[FaultRule] = list(rules)
+        self._lock = threading.Lock()
+
+    def rule(self, action: str, **kw) -> "FaultInjector":
+        """Append a :class:`FaultRule` (chainable)."""
+        with self._lock:
+            self._rules.append(FaultRule(action, **kw))
+        return self
+
+    def fire(self, phase: str, op: str) -> Optional[str]:
+        """Advance counters for one call; apply side effects; return the
+        frame action (``drop``/``truncate``/``corrupt``) if one fired."""
+        effects: List[FaultRule] = []
+        frame_action: Optional[str] = None
+        with self._lock:
+            for r in self._rules:
+                if r.phase != phase or (r.op is not None and r.op != op):
+                    continue
+                r.matched += 1
+                if r.nth <= r.matched < r.nth + r.count:
+                    if r.action in _FRAME_ACTIONS:
+                        if frame_action is None:
+                            frame_action = r.action
+                    else:
+                        effects.append(r)
+        for r in effects:  # outside the lock: callbacks/sleeps may be slow
+            if r.action == "delay":
+                time.sleep(r.seconds)
+            elif r.callback is not None:
+                r.callback()
+        return frame_action
+
+
 class WorkerConnection:
     """Client handle to one fleet worker, with per-call timeouts.
 
@@ -114,12 +216,14 @@ class WorkerConnection:
 
     def __init__(
         self, host: str, port: int, *, timeout_s: float = 60.0,
-        name: Optional[str] = None,
+        name: Optional[str] = None, fault: Optional[FaultInjector] = None,
     ) -> None:
         self.host = host
         self.port = port
         self.name = name or f"{host}:{port}"
         self.timeout_s = timeout_s
+        #: Optional chaos seam; assign a :class:`FaultInjector` any time.
+        self.fault = fault
         #: Serializes all socket use; held across each send+recv pair (see
         #: module docstring). Reentrant so ``call`` and fleet-level exchange
         #: locking compose.
@@ -155,6 +259,7 @@ class WorkerConnection:
     ) -> None:
         msg = dict(header or {})
         msg["op"] = op
+        action = None if self.fault is None else self.fault.fire("send", op)
         with self.lock:
             sock = self._sock
             if sock is None:
@@ -162,7 +267,19 @@ class WorkerConnection:
             try:
                 sock.settimeout(self.timeout_s if timeout_s is None
                                 else timeout_s)
-                send_frame(sock, msg, arrays)
+                if action is None:
+                    send_frame(sock, msg, arrays)
+                elif action == "drop":
+                    pass  # frame vanishes; the matching recv will time out
+                else:
+                    wire = encode_frame(msg, arrays)
+                    if action == "truncate":
+                        sock.sendall(wire[: max(1, len(wire) // 2)])
+                        self.close()  # stream desynced beyond repair
+                    else:  # corrupt: oversized length prefix
+                        sock.sendall(
+                            _LEN.pack(MAX_FRAME_BYTES + 1) + wire[_LEN.size:]
+                        )
             except (OSError, EOFError) as exc:
                 self.close()  # partial write: stream desynced
                 raise WorkerUnavailable(self.name, op, str(exc)) from exc
@@ -170,6 +287,8 @@ class WorkerConnection:
     def recv(
         self, op: str = "reply", timeout_s: Optional[float] = None,
     ) -> Tuple[dict, List[np.ndarray]]:
+        if self.fault is not None:
+            self.fault.fire("recv", op)  # delay/kill rules only
         with self.lock:
             sock = self._sock
             if sock is None:

@@ -34,7 +34,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import signal
 import socket
+import struct
 import sys
 import traceback
 from typing import List, Optional, Tuple
@@ -182,6 +184,12 @@ def _serve_connection(conn: socket.socket, state: dict) -> bool:
             header, arrays = recv_frame(conn)
         except (EOFError, OSError):
             return False  # client gone; go back to accept()
+        except (ValueError, KeyError, TypeError, struct.error):
+            # Corrupt frame (oversized length prefix, malformed header):
+            # the stream position is unknowable — drop this connection and
+            # keep serving. The worker must survive garbage on the wire.
+            traceback.print_exc(file=sys.stderr)
+            return False
         op = header.get("op", "")
         try:
             if op == "ping":
@@ -218,6 +226,17 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--port", type=int, default=0,
                     help="0 = ephemeral (bound port printed on stdout)")
     args = ap.parse_args(argv)
+
+    if hasattr(signal, "SIGTERM"):
+        # Graceful stop (WorkerHandle.kill's grace window). Flush and exit
+        # immediately: raising SystemExit from a handler mid-exchange would
+        # unwind through library frames and spew tracebacks at teardown.
+        def _on_sigterm(*_):
+            sys.stdout.flush()
+            sys.stderr.flush()
+            os._exit(0)
+
+        signal.signal(signal.SIGTERM, _on_sigterm)
 
     srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
     srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)

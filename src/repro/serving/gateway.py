@@ -9,11 +9,18 @@ behind three endpoints:
   derived from its status: 200 ok, 429 overloaded, 504 deadline exceeded,
   503 worker unavailable, 400 invalid, 500 internal.
 * ``GET /healthz`` — 200 when serving; with a fleet attached, pings every
-  worker (bounded RPC) and degrades to 503 listing the dead ones. Pings
-  are serialized with in-flight beam exchanges by the per-connection RPC
-  lock, so an LB probe landing mid-query can never interleave frames with
-  the dispatch thread on a worker socket.
-* ``GET /metrics`` — :meth:`ServerMetrics.summary` as JSON.
+  worker (one concurrent bounded sweep) and reports per-worker liveness
+  plus, when a :class:`~repro.serving.fleet.FleetSupervisor` is running,
+  each worker's health-machine state. Dead workers degrade the status:
+  503 under ``degraded_policy="reject"`` (queries are failing) but 200
+  ``"degraded"`` under ``"serve_partial"`` while at least one worker
+  lives — the tier is still answering, partially and flagged, so an LB
+  must not eject it. Pings are serialized with in-flight beam exchanges
+  by the per-connection RPC lock, so an LB probe landing mid-query can
+  never interleave frames with the dispatch thread on a worker socket.
+* ``GET /metrics`` — :meth:`ServerMetrics.summary` as JSON, plus a
+  ``"fleet"`` roll-up (up/suspect/restarting/failed worker counts and
+  total restarts) when a supervisor is attached.
 
 The float32 scores survive the JSON round trip bit-for-bit (see
 :mod:`repro.serving.api`), so gateway-served results are bitwise-identical
@@ -103,11 +110,8 @@ class ServingGateway:
                     code, doc = gateway._healthz()
                     self._reply(code, doc)
                 elif self.path == "/metrics":
-                    self._reply(
-                        200,
-                        {"v": WIRE_VERSION,
-                         **gateway.batcher.metrics.summary()},
-                    )
+                    code, doc = gateway._metrics()
+                    self._reply(code, doc)
                 else:
                     self._reply(404, {"v": WIRE_VERSION, "detail": "not found"})
 
@@ -156,9 +160,29 @@ class ServingGateway:
         if self.fleet is not None:
             workers = self.fleet.ping()
             doc["workers"] = workers
+            supervisor = getattr(self.fleet, "supervisor", None)
+            if supervisor is not None:
+                doc["supervision"] = supervisor.states()
             if not all(workers.values()):
                 doc["status"] = "degraded"
+                policy = getattr(self.fleet, "degraded_policy", "reject")
+                doc["degraded_policy"] = policy
+                if policy == "serve_partial" and any(workers.values()):
+                    # Still answering (partial, flagged on the wire): 200
+                    # so load balancers keep routing; operators read the
+                    # "degraded" status + supervision states instead.
+                    return 200, doc
                 return 503, doc
+        return 200, doc
+
+    def _metrics(self) -> tuple:
+        doc = {"v": WIRE_VERSION, **self.batcher.metrics.summary()}
+        supervisor = (
+            getattr(self.fleet, "supervisor", None)
+            if self.fleet is not None else None
+        )
+        if supervisor is not None:
+            doc["fleet"] = supervisor.metrics()
         return 200, doc
 
     # -- lifecycle ----------------------------------------------------------

@@ -117,6 +117,7 @@ class ServerMetrics:
     shed: int = 0
     shed_by_priority: Dict[int, int] = dataclasses.field(default_factory=dict)
     deadline_missed: int = 0
+    degraded_served: int = 0  # successful queries answered from a partial fleet
     _t_first: float | None = None
     _t_last: float | None = None
     _lock: threading.Lock = dataclasses.field(
@@ -138,6 +139,11 @@ class ServerMetrics:
     def record_deadline_miss(self) -> None:
         with self._lock:
             self.deadline_missed += 1
+
+    def record_degraded(self, n_queries: int) -> None:
+        """Count queries served degraded (partial fleet, survivor-exact)."""
+        with self._lock:
+            self.degraded_served += n_queries
 
     # -- batch accounting (worker thread) -----------------------------------
     def record_batch(
@@ -202,6 +208,8 @@ class ServerMetrics:
                         )
                     out["deadline_missed"] = self.deadline_missed
                     out["deadline_miss_rate"] = self.deadline_missed / self.offered
+                if self.degraded_served:
+                    out["degraded_served"] = self.degraded_served
                 return out
             e2e = np.asarray(self.e2e_ms)
             wait = np.asarray(self.queue_wait_ms)
@@ -235,6 +243,9 @@ class ServerMetrics:
                 )
             out["deadline_missed"] = self.deadline_missed
             out["deadline_miss_rate"] = self.deadline_missed / offered
+            if self.degraded_served:
+                out["degraded_served"] = self.degraded_served
+                out["degraded_rate"] = self.degraded_served / offered
             if self.partition_hits:
                 hits = np.sum(self.partition_hits, axis=0).astype(float)
                 total = max(hits.sum(), 1.0)

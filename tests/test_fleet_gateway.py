@@ -25,6 +25,7 @@ from repro.core import XMRTree
 from repro.serving import (
     AdmissionPolicy,
     BatchPolicy,
+    FleetConfig,
     MicroBatcher,
     PartitionConfig,
     Query,
@@ -83,11 +84,15 @@ def test_fleet_gateway_bitwise_and_worker_failure(small_setup):
             ell_width=32, max_batch=64,
             partition=PartitionConfig(partitions=2,
                                       partition_sync="pipelined"),
+            # Pin the pre-supervision semantics: a dead worker fails
+            # queries typed (serve_partial is covered in test_chaos.py).
+            fleet=FleetConfig(degraded_policy="reject"),
         ),
     )
     with PartitionFleet.launch(2, rpc_timeout_s=120.0) as fleet:
         fleet.attach(engine)
         assert engine.planner.transport is fleet
+        assert fleet.degraded_policy == "reject"  # synced from the config
         with MicroBatcher(engine, BatchPolicy(max_batch=8, max_wait_ms=5.0)) \
                 as mb, ServingGateway(mb, fleet=fleet) as gw:
             # healthy fleet
