@@ -65,6 +65,25 @@ def beam_select(
     return top_ids.astype(jnp.int32), top_scores
 
 
+def topk_canonical(
+    scores: jax.Array,  # f32 [n, m] candidate scores (NEG_INF = masked)
+    ids: jax.Array,     # int32 [n, m] candidate ids, aligned with scores
+    k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Canonical top-k over flat candidate lists: (score desc, id asc).
+
+    The same two-key sort as :func:`beam_select`, exposed for paths that
+    already hold flat ``(ids, scores)`` candidates — sharded local selects,
+    cross-partition merges — so every selection in the stack breaks ties
+    identically and stays bitwise-reproducible regardless of candidate
+    layout. Returns ``(ids[:, :k], scores[:, :k])``.
+    """
+    neg_sorted, id_sorted = jax.lax.sort(
+        (-scores, ids), dimension=1, num_keys=2
+    )
+    return id_sorted[:, :k].astype(jnp.int32), -neg_sorted[:, :k]
+
+
 def beam_step(
     parent_ids: jax.Array,     # int32 [n, b]
     parent_scores: jax.Array,  # f32 [n, b]

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import mscm as mscm_lib
-from repro.core.beam import NEG_INF, beam_step
+from repro.core.beam import NEG_INF, beam_step, topk_canonical
 from repro.core.tree import TreeLayerArrays, XMRTree
 
 
@@ -133,14 +133,16 @@ def sharded_infer(
             NEG_INF,
         )
         k = min(topk, n_cols[li])
-        loc_s, pos = jax.lax.top_k(comb.reshape(n, -1), k)      # local top-k
-        loc_i = jnp.take_along_axis(child.reshape(n, -1), pos, axis=1)
-        # candidate all-gather over the label shards + global top-k
+        # canonical (score desc, id asc) local top-k — same tie-break as
+        # beam_select, so the shard boundary can never reorder ties
+        loc_i, loc_s = topk_canonical(
+            comb.reshape(n, -1), child.reshape(n, -1), k
+        )
+        # candidate all-gather over the label shards + canonical global top-k
         all_s = jax.lax.all_gather(loc_s, "model", axis=1).reshape(n, -1)
         all_i = jax.lax.all_gather(loc_i, "model", axis=1).reshape(n, -1)
-        g_s, g_pos = jax.lax.top_k(all_s, k)
-        g_i = jnp.take_along_axis(all_i, g_pos, axis=1)
-        return g_s, g_i.astype(jnp.int32)
+        g_i, g_s = topk_canonical(all_s, all_i, k)
+        return g_s, g_i
 
     return run(x_idx, x_val, leaf_sharded.chunk_rows, leaf_sharded.chunk_vals,
                tuple(upper_flat))

@@ -85,7 +85,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mscm as mscm_lib
-from repro.core.beam import NEG_INF, beam_select
+from repro.core.beam import NEG_INF, beam_select, topk_canonical
 from repro.core.tree import owned_level_combined
 from repro.index.cache import HotBeamCache
 from repro.index.partition import PartitionedIndex
@@ -278,11 +278,10 @@ def merge_topk(
     scores: jax.Array, labels: jax.Array, *, width: int
 ) -> Tuple[jax.Array, jax.Array]:
     """Canonical (score desc, id asc) top-``width`` of concatenated
-    per-partition candidates — the ``sync="final"`` merge."""
-    neg_sorted, id_sorted = jax.lax.sort(
-        (-scores, labels), dimension=1, num_keys=2
-    )
-    return -neg_sorted[:, :width], id_sorted[:, :width].astype(jnp.int32)
+    per-partition candidates — the ``sync="final"`` merge, delegated to
+    the one shared two-key sort in :func:`repro.core.beam.topk_canonical`."""
+    ids, top_scores = topk_canonical(scores, labels, width)
+    return top_scores, ids
 
 
 _scatter_dense = jax.jit(mscm_lib.scatter_dense, static_argnums=2)

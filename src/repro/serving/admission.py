@@ -47,7 +47,11 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional, Union
+from typing import TYPE_CHECKING, Deque, List, Optional, Union
+
+if TYPE_CHECKING:  # circular at runtime: batcher/metrics import this module
+    from repro.serving.batcher import _Request
+    from repro.serving.metrics import ServerMetrics
 
 SHED_REJECT = "reject"
 SHED_OLDEST = "shed-oldest"
@@ -138,16 +142,16 @@ class AdmissionController:
     ``metrics`` — neither ever raises into the caller.
     """
 
-    def __init__(self, policy: AdmissionPolicy, metrics) -> None:
+    def __init__(self, policy: AdmissionPolicy, metrics: "ServerMetrics") -> None:
         self.policy = policy
         self.metrics = metrics
 
-    def stamp_deadline(self, req) -> None:
+    def stamp_deadline(self, req: "_Request") -> None:
         """Attach the policy's default deadline to a request lacking one."""
         if req.t_deadline is None and self.policy.deadline_ms is not None:
             req.t_deadline = req.t_enqueue + 1e-3 * self.policy.deadline_ms
 
-    def admit(self, queue, req) -> bool:
+    def admit(self, queue: "Deque[_Request]", req: "_Request") -> bool:
         """Decide admission for ``req`` against the live deque ``queue``.
 
         Returns True if ``req`` should be appended. On shed, the victim's
@@ -179,7 +183,9 @@ class AdmissionController:
         self.metrics.record_shed(prio)
         return False
 
-    def expire(self, reqs, now: Optional[float] = None):
+    def expire(
+        self, reqs: "List[_Request]", now: Optional[float] = None
+    ) -> "List[_Request]":
         """Split a formed batch into live requests, failing expired ones.
 
         Called at dispatch time so an expired request never reaches the
@@ -187,7 +193,7 @@ class AdmissionController:
         """
         if now is None:
             now = time.perf_counter()
-        live = []
+        live: "List[_Request]" = []
         for r in reqs:
             if r.t_deadline is not None and now >= r.t_deadline:
                 waited = 1e3 * (now - r.t_enqueue)

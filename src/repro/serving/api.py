@@ -28,7 +28,7 @@ via ``result.error``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -48,7 +48,7 @@ STATUS_INVALID = "invalid"
 STATUS_INTERNAL_ERROR = "internal_error"
 
 #: Gateway status-code mapping — the serving tier's public error contract.
-HTTP_STATUS = {
+HTTP_STATUS: Dict[str, int] = {
     STATUS_OK: 200,
     STATUS_OVERLOADED: 429,
     STATUS_DEADLINE_EXCEEDED: 504,
@@ -105,7 +105,7 @@ class Query:
             )
 
     def to_wire(self) -> dict:
-        doc = {
+        doc: dict = {
             "v": WIRE_VERSION,
             "qid": int(self.qid),
             "idx": [int(i) for i in self.idx],
@@ -156,11 +156,13 @@ class QueryResult:
     ids: Optional[np.ndarray]        # int32 [k] label ids
     scores: Optional[np.ndarray]     # f32 [k]
     status: str = STATUS_OK
-    timing: dict = dataclasses.field(default_factory=dict)
+    timing: Dict[str, float] = dataclasses.field(default_factory=dict)
     error: Optional[BaseException] = None
     detail: str = ""
     degraded: bool = False
-    missing_labels: list = dataclasses.field(default_factory=list)
+    missing_labels: List[Tuple[int, int]] = dataclasses.field(
+        default_factory=list
+    )
 
     @property
     def ok(self) -> bool:
@@ -181,7 +183,8 @@ class QueryResult:
 
     @classmethod
     def from_error(
-        cls, qid: int, exc: BaseException, timing: Optional[dict] = None
+        cls, qid: int, exc: BaseException,
+        timing: Optional[Dict[str, float]] = None,
     ) -> "QueryResult":
         return cls(
             qid=qid, ids=None, scores=None,
@@ -190,7 +193,7 @@ class QueryResult:
         )
 
     def to_wire(self) -> dict:
-        doc = {
+        doc: dict = {
             "v": WIRE_VERSION,
             "qid": int(self.qid),
             "status": self.status,

@@ -82,7 +82,7 @@ class RequestQueue:
     """
 
     def __init__(self, admission: AdmissionController | None = None) -> None:
-        self._q: deque[_Request] = deque()
+        self._q: deque[_Request] = deque()  # guarded-by: _cond
         self._cond = threading.Condition()
         self._closed = False
         self._admission = admission
@@ -113,7 +113,7 @@ class RequestQueue:
             self._closed = True
             self._cond.notify_all()
 
-    def _pop(self, k: int) -> List[_Request]:
+    def _pop(self, k: int) -> List[_Request]:  # xmrlint: requires-lock=_cond
         out = []
         while self._q and len(out) < k:
             out.append(self._q.popleft())

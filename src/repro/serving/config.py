@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Optional, Union
+from typing import Any, Optional, Union
 
 
 @dataclasses.dataclass
@@ -138,7 +138,7 @@ class ServeConfig:
         admission: AdmissionConfig | None = None,
         partition: PartitionConfig | None = None,
         fleet: FleetConfig | None = None,
-        **flat,
+        **flat: Any,
     ) -> None:
         self.beam = beam
         self.topk = topk

@@ -32,6 +32,7 @@ partition via the stored load spec) and returns the pid to rotation.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import subprocess
 import sys
@@ -46,6 +47,8 @@ from repro.index.planner import BeamTransport, TransportDegraded
 from repro.serving.admission import WorkerUnavailable
 from repro.serving.config import DEGRADED_POLICIES
 from repro.serving.fleet.rpc import WorkerConnection
+
+log = logging.getLogger(__name__)
 
 
 class WorkerHandle:
@@ -148,7 +151,7 @@ def launch_workers(
                 host, int(ann["port"]), timeout_s=rpc_timeout_s, name=name
             )
             handles.append(WorkerHandle(conn, proc, name))
-    except BaseException:
+    except BaseException:  # noqa: BLE001 — reap the partial fleet, then re-raise
         # Reap EVERY spawned process, including those not yet wrapped in a
         # WorkerHandle — a failure at worker i must not orphan i..n-1 as
         # live JAX processes bound to ports. handles[j] wraps procs[j], so
@@ -156,8 +159,8 @@ def launch_workers(
         for h in handles:
             try:
                 h.kill()
-            except Exception:
-                pass
+            except Exception as exc:  # noqa: BLE001 — reap all before re-raising
+                log.warning("launch cleanup: kill(%s) failed: %s", h.name, exc)
         tail = procs[len(handles):]
         for proc in tail:
             if proc.poll() is None:
@@ -165,8 +168,10 @@ def launch_workers(
         for proc in tail:
             try:
                 proc.wait(timeout=30)
-            except Exception:
-                pass
+            except Exception as exc:  # noqa: BLE001 — reap all before re-raising
+                log.warning(
+                    "launch cleanup: wait(pid=%s) failed: %s", proc.pid, exc
+                )
         raise
     return handles
 
@@ -233,10 +238,10 @@ class PartitionFleet(BeamTransport):
         # Guards the down-set, handle swaps, and batch snapshots. Never
         # held while a socket is in flight.
         self._state_lock = threading.Lock()
-        self._down: Set[int] = set()
+        self._down: Set[int] = set()  # guarded-by: _state_lock
         # (pids, handles) snapshotted at begin() so mid-batch supervisor
         # swaps can't mix a fresh worker into a half-run exchange.
-        self._batch: Optional[Tuple[List[int], List[WorkerHandle]]] = None
+        self._batch: Optional[Tuple[List[int], List[WorkerHandle]]] = None  # guarded-by: _state_lock
         self._load_spec: Optional[dict] = None
         self._launch_opts: Optional[dict] = None
 
@@ -321,7 +326,7 @@ class PartitionFleet(BeamTransport):
                 for h, hd, arr in zip(self.handles, headers, arrays):
                     h.conn.send(op, hd, arr)
                 return [h.conn.recv(op) for h in self.handles]
-            except BaseException:
+            except BaseException:  # noqa: BLE001 — reset desynced streams, re-raise
                 self._reset_connections()
                 raise
         finally:
@@ -394,18 +399,18 @@ class PartitionFleet(BeamTransport):
                 for pid, h in zip(pids, handles):
                     try:
                         h.conn.send(op, header, arrays)
-                    except BaseException:
+                    except BaseException:  # noqa: BLE001 — tag the failed pid, re-raise
                         failed_pid = pid
                         raise
                 replies = []
                 for pid, h in zip(pids, handles):
                     try:
                         replies.append(h.conn.recv(op))
-                    except BaseException:
+                    except BaseException:  # noqa: BLE001 — tag the failed pid, re-raise
                         failed_pid = pid
                         raise
                 return [(reply[0], reply[1]) for _, reply in replies]
-            except BaseException as exc:
+            except BaseException as exc:  # noqa: BLE001 — degrade or re-raise below
                 self._reset_connections()
                 if (
                     self.degraded_policy == "serve_partial"
@@ -537,8 +542,11 @@ class PartitionFleet(BeamTransport):
             opts = self._launch_opts
         try:
             old.kill()
-        except Exception:
-            pass  # already dead / unreachable — reap best-effort
+        except Exception as exc:  # noqa: BLE001 — reap best-effort, then respawn
+            log.warning(
+                "respawn(%d): kill of old worker failed (already dead / "
+                "unreachable): %s", pid, exc,
+            )
         if opts is not None and old.proc is not None:
             new = launch_workers(1, **opts)[0]
             new.name = f"worker{pid}"
@@ -549,12 +557,15 @@ class PartitionFleet(BeamTransport):
         try:
             if self._load_spec is not None:
                 self.load_worker(pid, handle=new)
-        except BaseException:
+        except BaseException:  # noqa: BLE001 — reap the replacement, re-raise
             if new is not old:
                 try:
                     new.kill()
-                except Exception:
-                    pass
+                except Exception as exc:  # noqa: BLE001 — load failure re-raised below
+                    log.warning(
+                        "respawn(%d): cleanup kill of replacement failed: %s",
+                        pid, exc,
+                    )
             raise
         with self._state_lock:
             self.handles[pid] = new

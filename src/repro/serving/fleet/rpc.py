@@ -64,6 +64,7 @@ class RemoteError(RuntimeError):
     """The worker processed the call and replied with an error."""
 
 
+# xmrlint: transport-primitive — bottom of the frame stack; callers hold the lock
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
     buf = bytearray(n)
     view = memoryview(buf)
@@ -91,12 +92,14 @@ def encode_frame(header: dict, arrays: Sequence[np.ndarray] = ()) -> bytes:
     return b"".join(parts)
 
 
+# xmrlint: transport-primitive — bottom of the frame stack; callers hold the lock
 def send_frame(
     sock: socket.socket, header: dict, arrays: Sequence[np.ndarray] = ()
 ) -> None:
     sock.sendall(encode_frame(header, arrays))
 
 
+# xmrlint: transport-primitive — bottom of the frame stack; callers hold the lock
 def recv_frame(sock: socket.socket) -> Tuple[dict, List[np.ndarray]]:
     (total,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
     if total > MAX_FRAME_BYTES:

@@ -34,6 +34,7 @@ long backoff never delays probing the others.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from typing import Dict, Optional
@@ -41,6 +42,8 @@ from typing import Dict, Optional
 from repro.serving.admission import WorkerUnavailable
 from repro.serving.config import FleetConfig
 from repro.serving.fleet.rpc import RemoteError
+
+log = logging.getLogger(__name__)
 
 #: Worker health states (the values appear verbatim in /healthz).
 STATE_UP = "up"
@@ -82,7 +85,7 @@ class FleetSupervisor:
     def __init__(self, fleet, config: Optional[FleetConfig] = None) -> None:
         self.fleet = fleet
         self.config = config if config is not None else FleetConfig()
-        self._watch = [
+        self._watch = [  # guarded-by: _lock
             _WorkerWatch(pid) for pid in range(len(fleet.handles))
         ]
         self._stop = threading.Event()
@@ -158,7 +161,7 @@ class FleetSupervisor:
         w.restarts += 1
         try:
             self.fleet.respawn_worker(w.pid)
-        except Exception as exc:
+        except Exception as exc:  # noqa: BLE001 — recorded on the watch, drives backoff
             w.backoff_s = (
                 cfg.backoff_base_s if w.backoff_s == 0.0
                 else min(w.backoff_s * 2.0, cfg.backoff_max_s)
@@ -215,10 +218,10 @@ class FleetSupervisor:
         while not self._stop.wait(self.config.poll_interval_s):
             try:
                 self.poll_once()
-            except Exception:
+            except Exception:  # noqa: BLE001 — supervision must survive any sweep
                 # A sweep must never kill supervision (e.g. a handle racing
                 # close()); the next sweep re-observes from scratch.
-                pass
+                log.exception("supervision sweep failed; retrying next poll")
 
     def stop(self) -> None:
         self._stop.set()

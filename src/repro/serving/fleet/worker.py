@@ -31,6 +31,8 @@ matmul running on this worker's device while the coordinator merges beams.
 
 from __future__ import annotations
 
+# xmrlint: single-threaded — one accept loop, one connection, no concurrent
+# frame writers on this socket; the coordinator side carries the lock.
 import argparse
 import json
 import os

@@ -1,0 +1,18 @@
+"""XMR005 positive fixture: sentinel equality + ad-hoc beam selection."""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def mask_of(scores):
+    return scores == NEG_INF          # VIOLATION: float eq on sentinel
+
+
+def still_bad(scores):
+    return scores != NEG_INF          # VIOLATION: != is the same hazard
+
+
+def my_select(scores, k):
+    return jax.lax.top_k(scores, k)   # VIOLATION: ad-hoc selection

@@ -1,0 +1,23 @@
+"""XMR005 negative fixture: mask-based sentinels, canonical helpers only."""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def mask_of(scores, valid):
+    return jnp.where(valid, scores, NEG_INF)  # producing mask, no equality
+
+
+def ordering(scores):
+    return scores > NEG_INF / 2               # ordering test: allowed
+
+
+def beam_select(scores, ids, k):
+    neg, idx = jax.lax.sort((-scores, ids), dimension=1, num_keys=2)
+    return idx[:, :k], -neg[:, :k]
+
+
+def topk_canonical(scores, ids, k):
+    return jax.lax.top_k(scores, k)           # inside a canonical helper

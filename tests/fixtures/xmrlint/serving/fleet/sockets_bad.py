@@ -1,0 +1,11 @@
+"""XMR001 positive fixture (fleet sockets): raw stream ops without the lock."""
+
+
+class Connection:
+    def __init__(self, sock, lock):
+        self.sock = sock
+        self.lock = lock
+
+    def ping(self):
+        self.sock.sendall(b"ping")  # VIOLATION: no 'lock' held
+        return self.sock.recv(4)    # VIOLATION: no 'lock' held

@@ -1,0 +1,18 @@
+"""XMR001 negative fixture (fleet sockets): ops under the connection lock,
+primitives annotated, callers exempted."""
+
+
+# xmrlint: transport-primitive — callers hold the lock
+def send_frame(sock, payload):
+    sock.sendall(payload)
+
+
+class Connection:
+    def __init__(self, sock, lock):
+        self.sock = sock
+        self.lock = lock
+
+    def ping(self):
+        with self.lock:
+            send_frame(self.sock, b"ping")
+            return self.sock.recv(4)

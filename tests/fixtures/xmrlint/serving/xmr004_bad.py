@@ -1,0 +1,16 @@
+"""XMR004 positive fixture: silent broad exception swallows."""
+
+
+def cleanup(handles):
+    for h in handles:
+        try:
+            h.kill()
+        except Exception:   # VIOLATION: swallowed, no log / raise / use
+            pass
+
+
+def poll(worker):
+    try:
+        worker.ping()
+    except BaseException:   # VIOLATION: swallowed
+        return None

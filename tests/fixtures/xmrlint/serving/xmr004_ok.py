@@ -1,0 +1,38 @@
+"""XMR004 negative fixture: broad catches that log, re-raise, or convert."""
+
+import logging
+
+log = logging.getLogger(__name__)
+
+
+class WorkerUnavailable(RuntimeError):
+    pass
+
+
+def cleanup(handles):
+    for h in handles:
+        try:
+            h.kill()
+        except Exception as exc:
+            log.warning("kill failed: %s", exc)
+
+
+def convert(worker):
+    try:
+        worker.ping()
+    except Exception as exc:
+        raise WorkerUnavailable(str(exc)) from exc
+
+
+def record(worker, sink):
+    try:
+        worker.ping()
+    except Exception as exc:
+        sink.set_exception(exc)  # bound exception is used: compliant
+
+
+def narrow(worker):
+    try:
+        worker.ping()
+    except (OSError, ValueError):  # narrow catch: out of scope
+        pass

@@ -1,0 +1,15 @@
+"""XMR001 positive fixture: guarded field touched without its lock."""
+
+import threading
+
+
+class Fleet:
+    def __init__(self):
+        self._state_lock = threading.Lock()
+        self._down = set()  # guarded-by: _state_lock
+
+    def mark_down(self, pid):
+        self._down.add(pid)  # VIOLATION: no lock held
+
+    def down(self):
+        return sorted(self._down)  # VIOLATION: no lock held

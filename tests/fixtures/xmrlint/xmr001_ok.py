@@ -1,0 +1,31 @@
+"""XMR001 negative fixture: every guarded access holds the lock."""
+
+import threading
+
+
+class Fleet:
+    def __init__(self):
+        self._state_lock = threading.Lock()
+        self._down = set()  # guarded-by: _state_lock
+
+    def mark_down(self, pid):
+        with self._state_lock:
+            self._down.add(pid)
+
+    def down(self):
+        with self._state_lock:
+            return sorted(self._down)
+
+    def _drain(self):  # xmrlint: requires-lock=_state_lock
+        self._down.clear()
+
+    def reset(self):
+        with self._state_lock:
+            self._drain()
+
+    def fan_out(self):
+        self._state_lock.acquire()
+        try:
+            return len(self._down)
+        finally:
+            self._state_lock.release()

@@ -1,0 +1,23 @@
+"""XMR002 positive fixture: host syncs and Python branches on traced values."""
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def scores_bad(x):
+    s = x * 2.0
+    if s.sum() > 0:          # VIOLATION: Python branch on a tracer
+        s = s + 1.0
+    peak = float(s.max())    # VIOLATION: host sync under trace
+    host = np.asarray(s)     # VIOLATION: np.* on a traced value
+    return s, peak, host
+
+
+def helper(y):
+    return y.item()          # VIOLATION: reachable from the jit root
+
+
+@jax.jit
+def root(y):
+    return helper(y)

@@ -1,0 +1,22 @@
+"""XMR002 negative fixture: static-shape branches, jnp ops, static args."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "k"))
+def scores_ok(x, mode, k, init=None):
+    n, b = x.shape                # shapes are static under trace
+    if mode == "prod":            # static argument: fine to branch
+        x = x * 2.0
+    if init is not None:          # pytree structure: static
+        x = x + init
+    if x.ndim == 2 and k > 0:     # ndim static, k static
+        x = x.reshape(n * b)
+    return jnp.maximum(x, 0.0)
+
+
+def untraced(v):
+    return float(v)  # not reachable from any jit root: fine

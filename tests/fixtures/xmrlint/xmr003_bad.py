@@ -1,0 +1,16 @@
+"""XMR003 positive fixture: raw sizes fed to jit static args."""
+
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("count",))
+def run(x, count):
+    return x[:count]
+
+
+def serve(batch):
+    n = len(batch)
+    run(batch, count=n)              # VIOLATION: raw len() is unbounded
+    run(batch, batch.shape[0])       # VIOLATION: raw shape, positionally

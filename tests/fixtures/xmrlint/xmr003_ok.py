@@ -1,0 +1,27 @@
+"""XMR003 negative fixture: statics bounded by buckets, clamps, config."""
+
+import functools
+
+import jax
+
+MAX_BATCH = 64
+
+
+def bucket_for(n):
+    k = 1
+    while k < n:
+        k *= 2
+    return k
+
+
+@functools.partial(jax.jit, static_argnames=("count", "width"))
+def run(x, count, width=8):
+    return x[:count, :width]
+
+
+def serve(batch, beam):
+    run(batch, count=bucket_for(len(batch)))      # bucketed: bounded
+    run(batch, count=MAX_BATCH)                   # constant: bounded
+    width = batch.shape[1]
+    width = min(beam, width * 2)                  # clamped: bounded
+    run(batch, count=MAX_BATCH, width=width)

@@ -1,0 +1,253 @@
+"""xmrlint: every rule catches its seeded fixture and passes its clean twin;
+suppressions, baseline round-trips, the CLI, and the repo-is-clean gate.
+
+The golden fixtures live under ``tests/fixtures/xmrlint/`` — one ``*_bad``
+(seeded violations, line-pinned below) and one ``*_ok`` (idiomatic
+compliant code) per rule. Recursive discovery skips the fixture tree, so
+the repo-wide gate and these tests never fight; fixtures are linted by
+naming them explicitly, exactly like the CLI would.
+"""
+
+import io
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+from tools.xmrlint import Baseline, all_rules, lint_paths, main
+from tools.xmrlint.core import BAD_SUPPRESSION_ID, ModuleContext, run_rules
+
+REPO = Path(__file__).resolve().parents[1]
+FIX = REPO / "tests" / "fixtures" / "xmrlint"
+
+
+def lint(*relpaths, rules=None, baseline=None):
+    new, old, stale, n = lint_paths(
+        [FIX / r for r in relpaths], root=REPO, rules=rules, baseline=baseline
+    )
+    return new
+
+
+def rules_of(violations):
+    return {v.rule for v in violations}
+
+
+# -- one positive + one negative per rule ------------------------------------
+
+def test_xmr001_guarded_fields_positive():
+    found = lint("xmr001_bad.py")
+    assert rules_of(found) == {"XMR001"}
+    assert len(found) == 2  # unlocked add + unlocked read
+    assert all("guarded-by" in v.message for v in found)
+
+
+def test_xmr001_guarded_fields_negative():
+    assert lint("xmr001_ok.py") == []
+
+
+def test_xmr001_fleet_sockets_positive():
+    found = lint("serving/fleet/sockets_bad.py")
+    assert rules_of(found) == {"XMR001"}
+    assert len(found) == 2  # sendall + recv
+    assert all("per-connection lock" in v.message for v in found)
+
+
+def test_xmr001_fleet_sockets_negative():
+    assert lint("serving/fleet/sockets_ok.py") == []
+
+
+def test_xmr002_trace_safety_positive():
+    found = lint("xmr002_bad.py")
+    assert rules_of(found) == {"XMR002"}
+    lines = {v.line for v in found}
+    assert 10 in lines  # if s.sum() > 0
+    assert 12 in lines  # float(s.max())
+    assert 13 in lines  # np.asarray(s)
+    assert 18 in lines  # helper's .item(), reachable from root
+
+
+def test_xmr002_trace_safety_negative():
+    assert lint("xmr002_ok.py") == []
+
+
+def test_xmr003_recompile_hazard_positive():
+    found = lint("xmr003_bad.py")
+    assert rules_of(found) == {"XMR003"}
+    assert len(found) == 2  # len() kwarg + shape positional
+    assert all("bucket" in v.message for v in found)
+
+
+def test_xmr003_recompile_hazard_negative():
+    assert lint("xmr003_ok.py") == []
+
+
+def test_xmr004_exception_discipline_positive():
+    found = lint("serving/xmr004_bad.py")
+    assert rules_of(found) == {"XMR004"}
+    assert len(found) == 2  # except Exception: pass + except BaseException
+
+
+def test_xmr004_exception_discipline_negative():
+    assert lint("serving/xmr004_ok.py") == []
+
+
+def test_xmr004_scoped_to_serving_and_index(tmp_path):
+    # the same swallow outside serving//index/ is out of scope
+    src = (FIX / "serving" / "xmr004_bad.py").read_text()
+    other = tmp_path / "elsewhere.py"
+    other.write_text(src)
+    new, _, _, _ = lint_paths([other], root=tmp_path)
+    assert new == []
+
+
+def test_xmr005_parity_discipline_positive():
+    found = lint("repro/core/xmr005_bad.py")
+    assert rules_of(found) == {"XMR005"}
+    assert len(found) == 3  # ==, !=, ad-hoc top_k
+
+
+def test_xmr005_parity_discipline_negative():
+    assert lint("repro/core/xmr005_ok.py") == []
+
+
+# -- suppressions -------------------------------------------------------------
+
+def _ctx(tmp_path, source, name="mod.py"):
+    f = tmp_path / name
+    f.write_text(source)
+    return ModuleContext.from_file(f, tmp_path)
+
+
+XMR005_EQ = "NEG_INF = -1e30\n\ndef f(s):\n    return s == NEG_INF{comment}\n"
+
+
+def test_inline_suppression_with_justification_silences(tmp_path):
+    ctx = _ctx(tmp_path, XMR005_EQ.format(
+        comment="  # xmrlint: disable=XMR005 -- mask unavailable here"
+    ))
+    assert run_rules(ctx, all_rules().values()) == []
+
+
+def test_bare_suppression_is_itself_reported(tmp_path):
+    ctx = _ctx(tmp_path, XMR005_EQ.format(
+        comment="  # xmrlint: disable=XMR005"
+    ))
+    found = run_rules(ctx, all_rules().values())
+    # the bare disable silences nothing AND is flagged as XMR000
+    assert rules_of(found) == {BAD_SUPPRESSION_ID, "XMR005"}
+
+
+def test_standalone_suppression_covers_next_statement(tmp_path):
+    ctx = _ctx(
+        tmp_path,
+        "NEG_INF = -1e30\n\ndef f(s):\n"
+        "    # xmrlint: disable=XMR005 -- fixture exercises the comment form\n"
+        "    return s == NEG_INF\n",
+    )
+    assert run_rules(ctx, all_rules().values()) == []
+
+
+# -- baseline -----------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    found = lint("repro/core/xmr005_bad.py")
+    assert found
+    base = Baseline.from_violations(found, justification="fixture pin")
+    path = tmp_path / "baseline.json"
+    base.save(path)
+    loaded = Baseline.load(path)
+    assert all(loaded.contains(v) for v in found)
+    # baselined findings no longer gate; nothing is stale
+    new = lint("repro/core/xmr005_bad.py", baseline=loaded)
+    assert new == []
+
+
+def test_baseline_fingerprint_survives_line_drift(tmp_path):
+    src = "NEG_INF = -1e30\n\ndef f(s):\n    return s == NEG_INF\n"
+    before = run_rules(_ctx(tmp_path, src), all_rules().values())
+    base = Baseline.from_violations(before, justification="pin")
+    drifted = "NEG_INF = -1e30\n\n# a new comment\n\ndef f(s):\n    return s == NEG_INF\n"
+    after = run_rules(_ctx(tmp_path, drifted), all_rules().values())
+    assert [v.line for v in after] != [v.line for v in before]
+    assert all(base.contains(v) for v in after)
+
+
+def test_baseline_rejects_missing_justification(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({
+        "version": 1,
+        "entries": [{"rule": "XMR005", "path": "x.py", "fingerprint": "ab",
+                     "justification": "  "}],
+    }))
+    with pytest.raises(ValueError, match="justification"):
+        Baseline.load(path)
+
+
+def test_stale_baseline_entries_reported():
+    base = Baseline([{
+        "rule": "XMR005", "path": "repro/core/gone.py",
+        "fingerprint": "deadbeefdeadbeef", "justification": "was fixed",
+    }])
+    new, old, stale, _ = lint_paths(
+        [FIX / "repro/core/xmr005_ok.py"], root=REPO, baseline=base
+    )
+    assert new == [] and old == []
+    assert [e["fingerprint"] for e in stale] == ["deadbeefdeadbeef"]
+
+
+# -- CLI ----------------------------------------------------------------------
+
+def _run_cli(argv, capsys):
+    code = main(argv)
+    return code, capsys.readouterr().out
+
+
+def test_cli_json_format_and_exit_code(capsys):
+    code, out = _run_cli(
+        [str(FIX / "repro/core/xmr005_bad.py"), "--format=json",
+         "--no-baseline"],
+        capsys,
+    )
+    assert code == 1
+    doc = json.loads(out)
+    assert doc["counts"] == {"XMR005": 3}
+    assert {v["rule"] for v in doc["violations"]} == {"XMR005"}
+
+
+def test_cli_select_limits_rules(capsys):
+    code, out = _run_cli(
+        [str(FIX / "xmr002_bad.py"), str(FIX / "xmr003_bad.py"),
+         "--select=XMR003", "--no-baseline", "--format=json"],
+        capsys,
+    )
+    assert code == 1
+    doc = json.loads(out)
+    assert set(doc["counts"]) == {"XMR003"}
+
+
+def test_cli_unknown_rule_is_usage_error(capsys):
+    assert main(["--select=XMR999"]) == 2
+
+
+# -- the gate itself ----------------------------------------------------------
+
+def test_repo_is_clean_end_to_end():
+    """The CI gate invariant: the real tree lints clean against the
+    committed baseline (which is empty — keep it that way)."""
+    baseline = Baseline.load(REPO / "tools" / "xmrlint" / "baseline.json")
+    assert baseline.entries == [], (
+        "baseline.json grew entries; fix the violations instead"
+    )
+    new, _, stale, n_files = lint_paths(
+        [REPO / "src", REPO / "tests", REPO / "benchmarks"],
+        root=REPO, baseline=baseline,
+    )
+    assert n_files > 50
+    assert new == [], "\n".join(v.text() for v in new)
+    assert stale == []
+
+
+def test_fixture_tree_is_skipped_by_discovery():
+    new, _, _, n_files = lint_paths([REPO / "tests"], root=REPO)
+    assert all("fixtures/xmrlint" not in v.path for v in new)

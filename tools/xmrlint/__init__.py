@@ -1,0 +1,26 @@
+"""xmrlint: repo-specific static analysis for the XMR serving stack.
+
+A small, stdlib-only (``ast`` + ``tokenize``) lint framework whose rules
+encode the invariants this codebase's serving fleet actually depends on —
+lock discipline on the beam-exchange RPC, zero-host-callback jit purity,
+bounded jit-cache cardinality, typed-exception contracts on the v1 wire,
+and canonical beam-selection parity. See ``tools/xmrlint/README.md`` for
+the rule catalogue and annotation conventions.
+
+Usage::
+
+    python -m tools.xmrlint src tests benchmarks
+    python -m tools.xmrlint --format=json --baseline tools/xmrlint/baseline.json src
+"""
+
+from tools.xmrlint.core import (  # noqa: F401
+    Baseline,
+    ModuleContext,
+    Rule,
+    Violation,
+    all_rules,
+    register,
+)
+from tools.xmrlint.runner import lint_paths, main  # noqa: F401
+
+__version__ = "1.0.0"

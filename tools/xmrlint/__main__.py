@@ -1,0 +1,8 @@
+"""``python -m tools.xmrlint`` entry point."""
+
+import sys
+
+from tools.xmrlint.runner import main
+
+if __name__ == "__main__":
+    sys.exit(main())

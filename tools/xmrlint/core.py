@@ -1,0 +1,418 @@
+"""xmrlint framework: rule registry, module context, suppressions, baseline.
+
+The pieces every rule builds on:
+
+* :class:`ModuleContext` — one parsed file: source, AST (with parent links),
+  the comment map (``tokenize``-accurate, so comments inside expressions are
+  attributed to their physical line), inline suppressions, and module-level
+  pragmas.
+* :class:`Violation` — one finding, with a *fingerprint* that is stable
+  under line drift (it hashes the rule, path, and normalized source line —
+  not the line number), so baseline entries survive unrelated edits.
+* :class:`Baseline` — the committed fix-me file: known violations that are
+  temporarily accepted. Every entry carries a justification; the gate fails
+  on violations not in the baseline and warns on stale entries.
+* :func:`register` / :func:`all_rules` — the rule registry. A rule is a
+  class with ``id``/``name``/``description`` and a ``check(ctx)`` generator;
+  adding rule six means writing one module under ``tools/xmrlint/rules/``
+  and importing it from the package ``__init__``.
+
+Suppression policy (enforced here, not per-rule): an inline
+``# xmrlint: disable=XMR00N -- <justification>`` silences matching rules on
+that physical line (or on the following statement line when the comment
+stands alone). The justification is **required**: a bare ``disable=`` is
+itself reported as ``XMR000 bad-suppression`` and does not silence anything.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import io
+import json
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Set, Tuple, Type
+
+#: ``# xmrlint: disable=XMR001[,XMR002] -- justification``
+_DISABLE_RE = re.compile(
+    r"#\s*xmrlint:\s*disable=(?P<rules>[A-Z0-9, ]+?)"
+    r"(?:\s*--\s*(?P<why>\S.*))?\s*$"
+)
+#: ``# xmrlint: <pragma>`` module/function pragmas (e.g. ``single-threaded``,
+#: ``transport-primitive``, ``requires-lock=_cond``).
+_PRAGMA_RE = re.compile(r"#\s*xmrlint:\s*(?!disable=)([A-Za-z][\w=.-]*)")
+
+BAD_SUPPRESSION_ID = "XMR000"
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One finding. ``fingerprint`` identifies it across line drift."""
+
+    rule: str
+    path: str       # repo-relative posix path
+    line: int       # 1-based
+    col: int        # 0-based
+    message: str
+    fingerprint: str
+
+    def text(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """Base class for one lint rule.
+
+    Subclasses set ``id`` (``XMR00N``), ``name`` (kebab-case), and
+    ``description``, and implement :meth:`check` as a generator of
+    :class:`Violation`. Use :meth:`violation` so fingerprints stay uniform.
+    """
+
+    id: str = "XMR999"
+    name: str = "unnamed"
+    description: str = ""
+
+    def applies_to(self, ctx: "ModuleContext") -> bool:
+        return True
+
+    def check(self, ctx: "ModuleContext") -> Iterator[Violation]:
+        raise NotImplementedError
+        yield  # pragma: no cover
+
+    def violation(
+        self, ctx: "ModuleContext", node: ast.AST, message: str
+    ) -> Violation:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        return make_violation(self.id, ctx, line, col, message)
+
+
+def make_violation(
+    rule_id: str, ctx: "ModuleContext", line: int, col: int, message: str
+) -> Violation:
+    return Violation(
+        rule=rule_id,
+        path=ctx.relpath,
+        line=line,
+        col=col,
+        message=message,
+        fingerprint=ctx.fingerprint(rule_id, line),
+    )
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    """Class decorator: add a rule to the registry (id must be unique)."""
+    rule = cls()
+    if rule.id in _REGISTRY:
+        raise ValueError(f"duplicate rule id {rule.id}")
+    _REGISTRY[rule.id] = rule
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    """The registry, importing the built-in rule package on first use."""
+    import tools.xmrlint.rules  # noqa: F401  (registers on import)
+
+    return dict(_REGISTRY)
+
+
+class ModuleContext:
+    """One parsed source file plus everything rules need to inspect it."""
+
+    def __init__(self, path: Path, relpath: str, source: str) -> None:
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=relpath)
+        _attach_parents(self.tree)
+        #: physical line -> comment text (including the leading ``#``)
+        self.comments: Dict[int, str] = {}
+        #: physical lines that hold *only* a comment (no code tokens)
+        self._comment_only: Set[int] = set()
+        self._tokenize_comments()
+        #: line -> rule ids validly suppressed on that line
+        self.suppressions: Dict[int, Set[str]] = {}
+        #: ``XMR000``: disables with no justification
+        self.bad_suppressions: List[Violation] = []
+        self._collect_suppressions()
+        #: module-level pragmas (``# xmrlint: <word>`` in the first 10 lines
+        #: or anywhere at column 0 before any code)
+        self.pragmas: Set[str] = self._module_pragmas()
+
+    # -- comments / pragmas --------------------------------------------------
+    def _tokenize_comments(self) -> None:
+        code_lines: Set[int] = set()
+        try:
+            for tok in tokenize.generate_tokens(io.StringIO(self.source).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+                elif tok.type not in (
+                    tokenize.NL,
+                    tokenize.NEWLINE,
+                    tokenize.INDENT,
+                    tokenize.DEDENT,
+                    tokenize.ENDMARKER,
+                ):
+                    for ln in range(tok.start[0], tok.end[0] + 1):
+                        code_lines.add(ln)
+        except tokenize.TokenError:  # unterminated string etc.; ast parsed OK
+            pass
+        self._comment_only = set(self.comments) - code_lines
+
+    def comment_on(self, line: int) -> str:
+        """The comment attached to ``line`` (same line, ``""`` if none)."""
+        return self.comments.get(line, "")
+
+    def function_pragmas(self, fn: ast.AST) -> Set[str]:
+        """Pragmas on a function: its ``def`` line or the line just above."""
+        out: Set[str] = set()
+        lineno = getattr(fn, "lineno", None)
+        if lineno is None:
+            return out
+        deco_floor = min(
+            [lineno] + [d.lineno for d in getattr(fn, "decorator_list", [])]
+        )
+        for ln in (lineno, deco_floor - 1):
+            for m in _PRAGMA_RE.finditer(self.comment_on(ln)):
+                out.add(m.group(1))
+        return out
+
+    def _module_pragmas(self) -> Set[str]:
+        out: Set[str] = set()
+        first_code = min(
+            (n.lineno for n in self.tree.body if not _is_docstring(n)),
+            default=len(self.lines) + 1,
+        )
+        for ln, comment in self.comments.items():
+            if ln <= first_code or ln in self._comment_only:
+                for m in _PRAGMA_RE.finditer(comment):
+                    out.add(m.group(1))
+        return out
+
+    # -- suppressions --------------------------------------------------------
+    def _collect_suppressions(self) -> None:
+        for ln, comment in sorted(self.comments.items()):
+            m = _DISABLE_RE.search(comment)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group("rules").split(",") if r.strip()}
+            why = (m.group("why") or "").strip()
+            if not why:
+                self.bad_suppressions.append(
+                    make_violation(
+                        BAD_SUPPRESSION_ID, self, ln, 0,
+                        "suppression without justification: write "
+                        "'# xmrlint: disable=XMR00N -- <why this is safe>'",
+                    )
+                )
+                continue
+            target = ln
+            if ln in self._comment_only:
+                # standalone comment suppresses the next code line
+                target = self._next_code_line(ln)
+            self.suppressions.setdefault(target, set()).update(rules)
+
+    def _next_code_line(self, ln: int) -> int:
+        for nxt in range(ln + 1, len(self.lines) + 1):
+            if nxt in self._comment_only or not self.lines[nxt - 1].strip():
+                continue
+            return nxt
+        return ln
+
+    def suppressed(self, v: Violation) -> bool:
+        return v.rule in self.suppressions.get(v.line, set())
+
+    # -- fingerprints --------------------------------------------------------
+    def fingerprint(self, rule_id: str, line: int) -> str:
+        norm = ""
+        if 1 <= line <= len(self.lines):
+            norm = "".join(self.lines[line - 1].split())
+        occurrence = sum(
+            1
+            for prior in range(1, line)
+            if "".join(self.lines[prior - 1].split()) == norm
+        )
+        key = f"{rule_id}:{self.relpath}:{norm}:{occurrence}"
+        return hashlib.sha256(key.encode()).hexdigest()[:16]
+
+    @classmethod
+    def from_file(cls, path: Path, root: Path) -> "ModuleContext":
+        try:
+            rel = path.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        return cls(path, rel, path.read_text(encoding="utf-8"))
+
+
+class Baseline:
+    """The committed fix-me file: accepted violations by fingerprint.
+
+    Schema (JSON)::
+
+        {"version": 1,
+         "entries": [{"rule": "XMR001", "path": "src/…", "fingerprint": "…",
+                      "justification": "why this is temporarily accepted"}]}
+
+    Matching is by ``(rule, path, fingerprint)`` so entries survive line
+    drift but die with the offending code. ``justification`` is mandatory —
+    the loader refuses entries without one.
+    """
+
+    VERSION = 1
+
+    def __init__(self, entries: Optional[Sequence[dict]] = None) -> None:
+        self.entries: List[dict] = list(entries or [])
+        self._keys: Set[Tuple[str, str, str]] = {
+            (e["rule"], e["path"], e["fingerprint"]) for e in self.entries
+        }
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        if not path.exists():
+            return cls()
+        doc = json.loads(path.read_text(encoding="utf-8"))
+        if doc.get("version") != cls.VERSION:
+            raise ValueError(
+                f"{path}: baseline version {doc.get('version')!r} != {cls.VERSION}"
+            )
+        entries = doc.get("entries", [])
+        for e in entries:
+            missing = {"rule", "path", "fingerprint", "justification"} - set(e)
+            if missing:
+                raise ValueError(
+                    f"{path}: baseline entry {e!r} missing {sorted(missing)}"
+                )
+            if not str(e["justification"]).strip():
+                raise ValueError(
+                    f"{path}: baseline entry for {e['rule']} at {e['path']} "
+                    "has an empty justification"
+                )
+        return cls(entries)
+
+    def save(self, path: Path) -> None:
+        doc = {"version": self.VERSION, "entries": self.entries}
+        path.write_text(json.dumps(doc, indent=2) + "\n", encoding="utf-8")
+
+    def contains(self, v: Violation) -> bool:
+        return (v.rule, v.path, v.fingerprint) in self._keys
+
+    def stale_entries(self, violations: Sequence[Violation]) -> List[dict]:
+        """Entries whose violation no longer exists (should be deleted)."""
+        live = {(v.rule, v.path, v.fingerprint) for v in violations}
+        return [
+            e
+            for e in self.entries
+            if (e["rule"], e["path"], e["fingerprint"]) not in live
+        ]
+
+    @classmethod
+    def from_violations(
+        cls, violations: Sequence[Violation], justification: str
+    ) -> "Baseline":
+        return cls(
+            [
+                {
+                    "rule": v.rule,
+                    "path": v.path,
+                    "fingerprint": v.fingerprint,
+                    "line": v.line,  # informational; matching ignores it
+                    "message": v.message,
+                    "justification": justification,
+                }
+                for v in violations
+            ]
+        )
+
+
+# -- shared AST helpers -------------------------------------------------------
+
+
+def _attach_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child.xmr_parent = node  # type: ignore[attr-defined]
+
+
+def parent(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "xmr_parent", None)
+
+
+def ancestors(node: ast.AST) -> Iterator[ast.AST]:
+    cur = parent(node)
+    while cur is not None:
+        yield cur
+        cur = parent(cur)
+
+
+def enclosing_function(node: ast.AST) -> Optional[ast.AST]:
+    for anc in ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return anc
+    return None
+
+
+def enclosing_class(node: ast.AST) -> Optional[ast.ClassDef]:
+    for anc in ancestors(node):
+        if isinstance(anc, ast.ClassDef):
+            return anc
+    return None
+
+
+def attr_tail(node: ast.AST) -> Optional[str]:
+    """The last segment of a Name/Attribute chain (``a.b._lock`` → ``_lock``)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for pure Name/Attribute chains, else None."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_docstring(node: ast.stmt) -> bool:
+    return (
+        isinstance(node, ast.Expr)
+        and isinstance(node.value, ast.Constant)
+        and isinstance(node.value.value, str)
+    )
+
+
+def iter_functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node  # type: ignore[misc]
+
+
+def run_rules(
+    ctx: ModuleContext, rules: Iterable[Rule]
+) -> List[Violation]:
+    """All unsuppressed findings for one module (bad suppressions included)."""
+    out: List[Violation] = list(ctx.bad_suppressions)
+    for rule in rules:
+        if not rule.applies_to(ctx):
+            continue
+        for v in rule.check(ctx):
+            if not ctx.suppressed(v):
+                out.append(v)
+    return out

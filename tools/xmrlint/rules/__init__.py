@@ -1,0 +1,15 @@
+"""Built-in rule passes. Importing this package registers every rule.
+
+To add rule six: create ``xmr006_your_rule.py`` defining a
+``@register``-decorated :class:`~tools.xmrlint.core.Rule` subclass, import
+it below, write a positive + negative fixture under
+``tests/fixtures/xmrlint/``, and document the id in ``tools/xmrlint/README.md``.
+"""
+
+from tools.xmrlint.rules import (  # noqa: F401
+    xmr001_lock_discipline,
+    xmr002_trace_safety,
+    xmr003_recompile_hazard,
+    xmr004_exception_discipline,
+    xmr005_parity_discipline,
+)

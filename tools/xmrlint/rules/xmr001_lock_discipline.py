@@ -1,0 +1,250 @@
+"""XMR001 — lock discipline on annotated fields and fleet socket paths.
+
+Two checks, both born from the PR-6 frame-interleaving bug (a health-check
+ping racing a beam exchange on the same socket):
+
+**Guarded fields.** A field declared with a trailing ``# guarded-by: <lock>``
+comment::
+
+    self._down: Set[int] = set()   # guarded-by: _state_lock
+
+may only be read or written while that lock is held. "Held" is judged
+lexically: the access sits inside a ``with <…>.<lock>:`` block, or the
+enclosing function calls ``<…>.<lock>.acquire(…)`` (the try/finally fan-out
+pattern), or the function is annotated ``# xmrlint: requires-lock=<lock>``
+(the obligation moves to its callers, which this rule then checks at every
+intra-class call site). ``__init__`` is exempt — construction happens-before
+publication.
+
+**Fleet socket discipline.** In ``serving/fleet`` modules, raw stream
+operations (``.sendall``/``.recv``/``.recv_into`` and the frame helpers
+``send_frame``/``recv_frame``) must run under a lock named ``lock`` — the
+per-connection ``WorkerConnection.lock`` convention — so two threads can
+never interleave frames on one socket. A module that is single-threaded by
+design (the worker's accept loop) opts out with a module-level
+``# xmrlint: single-threaded`` pragma; bottom-layer helpers that *implement*
+the transport are annotated ``# xmrlint: transport-primitive`` (their callers
+carry the obligation).
+
+The check is intraprocedural and name-based (the lock is matched by its
+final attribute segment), which is exactly as strong as the convention it
+enforces: annotate the field, and every unlocked touch becomes a finding.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, Optional, Set
+
+from tools.xmrlint.core import (
+    ModuleContext,
+    Rule,
+    Violation,
+    ancestors,
+    attr_tail,
+    dotted_name,
+    register,
+)
+
+GUARDED_BY_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][\w.]*)")
+_REQUIRES_LOCK = "requires-lock="
+_RAW_SOCKET_OPS = {"sendall", "recv", "recv_into"}
+_FRAME_HELPERS = {"send_frame", "recv_frame"}
+
+
+def _lock_tail(spec: str) -> str:
+    return spec.split(".")[-1]
+
+
+def _with_locks(node: ast.AST) -> Set[str]:
+    """Lock names (final segments) of every enclosing ``with`` item."""
+    held: Set[str] = set()
+    for anc in ancestors(node):
+        if isinstance(anc, (ast.With, ast.AsyncWith)):
+            for item in anc.items:
+                tail = attr_tail(item.context_expr)
+                if tail:
+                    held.add(tail)
+    return held
+
+
+def _function_acquires(fn: ast.AST) -> Set[str]:
+    """Locks the function calls ``.acquire()`` on anywhere in its body."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "acquire"
+        ):
+            tail = attr_tail(node.func.value)
+            if tail:
+                out.add(tail)
+    return out
+
+
+def _enclosing_functions(node: ast.AST):
+    for anc in ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield anc
+
+
+@register
+class LockDisciplineRule(Rule):
+    id = "XMR001"
+    name = "lock-discipline"
+    description = (
+        "fields annotated '# guarded-by: <lock>' may only be touched under "
+        "that lock; raw socket ops on fleet paths need the connection lock"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Violation]:
+        for cls in ast.walk(ctx.tree):
+            if isinstance(cls, ast.ClassDef):
+                yield from self._check_class(ctx, cls)
+        if (
+            "serving/fleet" in ctx.relpath
+            and "single-threaded" not in ctx.pragmas
+        ):
+            yield from self._check_sockets(ctx)
+
+    # -- guarded fields ------------------------------------------------------
+    def _guards(self, ctx: ModuleContext, cls: ast.ClassDef) -> Dict[str, str]:
+        """field name -> lock tail, from '# guarded-by:' declarations."""
+        guards: Dict[str, str] = {}
+        for node in ast.walk(cls):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign):
+                targets = [node.target]
+            else:
+                continue
+            m = GUARDED_BY_RE.search(ctx.comment_on(node.lineno))
+            if not m:
+                continue
+            lock = _lock_tail(m.group(1))
+            for t in targets:
+                if (
+                    isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                ):
+                    guards[t.attr] = lock
+                elif isinstance(t, ast.Name):  # class-level / dataclass field
+                    guards[t.id] = lock
+        return guards
+
+    def _requires(self, ctx: ModuleContext, cls: ast.ClassDef) -> Dict[str, str]:
+        """method name -> lock tail, from '# xmrlint: requires-lock=' pragmas."""
+        out: Dict[str, str] = {}
+        for node in cls.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for pragma in ctx.function_pragmas(node):
+                    if pragma.startswith(_REQUIRES_LOCK):
+                        out[node.name] = _lock_tail(pragma[len(_REQUIRES_LOCK):])
+        return out
+
+    def _held(
+        self,
+        ctx: ModuleContext,
+        node: ast.AST,
+        lock: str,
+        requires: Dict[str, str],
+    ) -> bool:
+        if lock in _with_locks(node):
+            return True
+        for fn in _enclosing_functions(node):
+            if fn.name == "__init__":
+                return True
+            if lock in _function_acquires(fn):
+                return True
+            if requires.get(fn.name) == lock:
+                return True
+            for pragma in ctx.function_pragmas(fn):
+                if pragma == f"{_REQUIRES_LOCK}{lock}":
+                    return True
+        return False
+
+    def _check_class(
+        self, ctx: ModuleContext, cls: ast.ClassDef
+    ) -> Iterator[Violation]:
+        guards = self._guards(ctx, cls)
+        requires = self._requires(ctx, cls)
+        if not guards and not requires:
+            return
+        for node in ast.walk(cls):
+            # self.<guarded-field> loads and stores
+            if (
+                isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+                and node.attr in guards
+            ):
+                lock = guards[node.attr]
+                if not self._held(ctx, node, lock, requires):
+                    yield self.violation(
+                        ctx, node,
+                        f"'self.{node.attr}' is guarded-by '{lock}' but "
+                        f"accessed without holding it (wrap in 'with "
+                        f"…{lock}:' or annotate the function "
+                        f"'# xmrlint: requires-lock={lock}')",
+                    )
+            # calls to requires-lock methods must themselves hold the lock
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "self"
+                and node.func.attr in requires
+            ):
+                lock = requires[node.func.attr]
+                if not self._held(ctx, node, lock, requires):
+                    yield self.violation(
+                        ctx, node,
+                        f"call to 'self.{node.func.attr}()' requires lock "
+                        f"'{lock}' to be held by the caller",
+                    )
+
+    # -- fleet socket discipline ---------------------------------------------
+    def _check_sockets(self, ctx: ModuleContext) -> Iterator[Violation]:
+        primitives: Set[str] = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if "transport-primitive" in ctx.function_pragmas(node):
+                    primitives.add(node.name)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            op: Optional[str] = None
+            if (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in _RAW_SOCKET_OPS
+            ):
+                op = dotted_name(node.func) or node.func.attr
+            elif (
+                isinstance(node.func, ast.Name)
+                and node.func.id in (_FRAME_HELPERS | primitives)
+            ):
+                op = node.func.id
+            if op is None:
+                continue
+            fns = list(_enclosing_functions(node))
+            if not fns:
+                continue
+            if any(f.name in primitives for f in fns):
+                continue  # the primitive itself; callers carry the lock
+            held = "lock" in _with_locks(node) or any(
+                "lock" in _function_acquires(f) for f in fns
+            )
+            if not held:
+                yield self.violation(
+                    ctx, node,
+                    f"raw stream operation '{op}' on a fleet path outside "
+                    "the per-connection lock — a concurrent ping can "
+                    "interleave frames with a beam exchange (hold "
+                    "'conn.lock', or mark the module "
+                    "'# xmrlint: single-threaded' / the helper "
+                    "'# xmrlint: transport-primitive')",
+                )

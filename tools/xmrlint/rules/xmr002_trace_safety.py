@@ -1,0 +1,380 @@
+"""XMR002 — zero-host-callback purity for jit-reachable functions.
+
+The grouped serving path compiles the whole traversal as ONE XLA program
+(pinned dynamically by ``test_grouped_fully_jitted``); this rule makes the
+contract a *compile-time* property: functions reachable from a ``jax.jit``
+root in the same module must not
+
+* call ``.item()`` / ``.tolist()`` (device→host sync),
+* call ``float()`` / ``bool()`` / ``int()`` on a traced value
+  (``TracerConversionError`` at best, silent recompiles at worst),
+* call ``np.*`` on a traced value (host round-trip; breaks tracing),
+* branch in Python (``if`` / ``while`` / ``assert`` / ternary) on a traced
+  value.
+
+Tracedness is a deliberately simple intraprocedural taint pass:
+
+* jit roots: parameters are traced unless named in ``static_argnames``;
+* helpers reached from a root: parameters are traced unless their name
+  appears in any of the module's ``static_argnames`` tuples, they are
+  annotated ``int``/``str``/``bool``, or they default to a str/bool
+  constant (the ``method=``/``score_mode=`` idiom);
+* ``x.shape`` / ``x.ndim`` / ``x.dtype`` / ``len(x)`` of a traced value are
+  *static* (JAX guarantees concrete shapes under trace), and ``is None`` /
+  ``is not None`` tests are static pytree structure — both are exempt.
+
+Single-module scope keeps the pass honest: a cross-module helper is either
+jitted itself (then it is a root in its own module) or trivially host-side.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from tools.xmrlint.core import (
+    ModuleContext,
+    Rule,
+    Violation,
+    dotted_name,
+    register,
+)
+
+_STATIC_ANNOTATIONS = {"int", "str", "bool"}
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes", "sharding"}
+_HOST_SYNC_METHODS = {"item", "tolist"}
+_HOST_CASTS = {"float", "bool", "int"}
+#: np attributes that are constants/dtypes/types — never host callbacks.
+_NP_SAFE_ATTRS = {
+    "float32", "float64", "int8", "int16", "int32", "int64",
+    "uint8", "uint16", "uint32", "uint64", "bool_", "dtype", "ndarray",
+    "nan", "inf", "pi", "newaxis", "generic", "number", "integer",
+    "floating",
+}
+_NUMPY_ALIASES = {"np", "numpy"}
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """True for ``jax.jit`` / bare ``jit`` references."""
+    name = dotted_name(node)
+    return name in ("jax.jit", "jit")
+
+
+def _static_names_from_call(call: ast.Call) -> Set[str]:
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for v in ast.walk(kw.value):
+                if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                    out.add(v.value)
+    return out
+
+
+def _jit_partial(call: ast.Call) -> Optional[Set[str]]:
+    """``functools.partial(jax.jit, static_argnames=…)`` → static names."""
+    if dotted_name(call.func) in ("functools.partial", "partial") and call.args:
+        if _is_jax_jit(call.args[0]):
+            return _static_names_from_call(call)
+    return None
+
+
+class _JitRoots:
+    """jit roots in one module: function name -> static param names."""
+
+    def __init__(self, ctx: ModuleContext) -> None:
+        self.roots: Dict[str, Set[str]] = {}
+        self.static_union: Set[str] = set()
+        self.functions: Dict[str, ast.FunctionDef] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, node)
+                statics = self._decorated_statics(node)
+                if statics is not None:
+                    self.roots[node.name] = statics
+        for node in ast.walk(ctx.tree):
+            # name = jax.jit(f, …) / functools.partial(jax.jit, …)(f)
+            if not isinstance(node, ast.Assign) or not isinstance(
+                node.value, ast.Call
+            ):
+                continue
+            call = node.value
+            statics: Optional[Set[str]] = None
+            target_fn: Optional[str] = None
+            if _is_jax_jit(call.func) and call.args:
+                statics = _static_names_from_call(call)
+                target_fn = dotted_name(call.args[0])
+            elif isinstance(call.func, ast.Call):
+                partial_statics = _jit_partial(call.func)
+                if partial_statics is not None and call.args:
+                    statics = partial_statics
+                    target_fn = dotted_name(call.args[0])
+            if statics is not None and target_fn and "." not in target_fn:
+                if target_fn in self.functions:
+                    self.roots[target_fn] = statics
+        for s in self.roots.values():
+            self.static_union |= s
+
+    def _decorated_statics(self, fn: ast.AST) -> Optional[Set[str]]:
+        for deco in getattr(fn, "decorator_list", []):
+            if _is_jax_jit(deco):
+                return set()
+            if isinstance(deco, ast.Call):
+                if _is_jax_jit(deco.func):
+                    return _static_names_from_call(deco)
+                partial_statics = _jit_partial(deco)
+                if partial_statics is not None:
+                    return partial_statics
+                # shard_map-decorated bodies trace like jit bodies
+                if dotted_name(deco.func) in ("shard_map", "jax.experimental.shard_map.shard_map"):
+                    return _static_names_from_call(deco)
+        return None
+
+    def reachable(self) -> Set[str]:
+        """Functions reachable from any root through same-module calls."""
+        calls: Dict[str, Set[str]] = {}
+        for name, fn in self.functions.items():
+            out: Set[str] = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    callee = dotted_name(node.func)
+                    if callee in self.functions:
+                        out.add(callee)
+            calls[name] = out
+        seen: Set[str] = set()
+        frontier: List[str] = list(self.roots)
+        while frontier:
+            cur = frontier.pop()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            frontier.extend(calls.get(cur, ()))
+        return seen
+
+
+def _param_names(fn: ast.FunctionDef) -> List[ast.arg]:
+    a = fn.args
+    return [*a.posonlyargs, *a.args, *a.kwonlyargs]
+
+
+def _static_params(
+    fn: ast.FunctionDef, declared: Optional[Set[str]], static_union: Set[str]
+) -> Set[str]:
+    params = _param_names(fn)
+    static: Set[str] = set()
+    defaults: Dict[str, ast.expr] = {}
+    a = fn.args
+    pos = [*a.posonlyargs, *a.args]
+    for arg, d in zip(reversed(pos), reversed(a.defaults)):
+        defaults[arg.arg] = d
+    for arg, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            defaults[arg.arg] = d
+    for arg in params:
+        name = arg.arg
+        if declared is not None and name in declared:
+            static.add(name)
+            continue
+        if declared is None:
+            ann = arg.annotation
+            if (
+                name in static_union
+                or (isinstance(ann, ast.Name) and ann.id in _STATIC_ANNOTATIONS)
+            ):
+                static.add(name)
+                continue
+            d = defaults.get(name)
+            if isinstance(d, ast.Constant) and isinstance(d.value, (str, bool)):
+                static.add(name)
+    return static
+
+
+class _Taint:
+    """Order-sensitive traced-name tracking through one function body."""
+
+    def __init__(self, traced: Set[str]) -> None:
+        self.traced = set(traced)
+
+    def mentions_traced(self, node: ast.AST) -> bool:
+        """Does ``node`` reference a traced name, ignoring static projections
+        (``.shape``/``.ndim``/…, ``len()``, ``is None`` comparisons)?"""
+        if isinstance(node, ast.Attribute) and node.attr in _SHAPE_ATTRS:
+            return False
+        if isinstance(node, ast.Call):
+            fname = dotted_name(node.func)
+            if fname in ("len", "isinstance", "type", "getattr", "hasattr"):
+                return False
+        if isinstance(node, ast.Compare) and all(
+            isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops
+        ):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        return any(self.mentions_traced(c) for c in ast.iter_child_nodes(node))
+
+    def _mark(self, target: ast.AST, traced: bool) -> None:
+        for n in ast.walk(target):
+            if isinstance(n, ast.Name):
+                if traced:
+                    self.traced.add(n.id)
+                else:
+                    self.traced.discard(n.id)
+
+    def assign(self, target: ast.AST, value: ast.AST) -> None:
+        self._mark(target, self.mentions_traced(value))
+
+    def for_targets(self, target: ast.AST, it: ast.AST) -> None:
+        if isinstance(it, ast.Call):
+            fname = dotted_name(it.func)
+            if fname == "range":
+                self._mark(target, False)
+                return
+            if fname == "enumerate" and isinstance(target, ast.Tuple) and it.args:
+                elts = target.elts
+                if len(elts) == 2:
+                    self._mark(elts[0], False)
+                    self._mark(elts[1], self.mentions_traced(it.args[0]))
+                    return
+        self._mark(target, self.mentions_traced(it))
+
+
+@register
+class TraceSafetyRule(Rule):
+    id = "XMR002"
+    name = "trace-safety"
+    description = (
+        "jit-reachable functions must not host-sync (.item/float/bool/np.*)"
+        " or branch in Python on traced values"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Violation]:
+        roots = _JitRoots(ctx)
+        if not roots.roots:
+            return
+        reachable = roots.reachable()
+        for name in sorted(reachable):
+            fn = roots.functions[name]
+            declared = roots.roots.get(name)
+            static = _static_params(fn, declared, roots.static_union)
+            traced = {a.arg for a in _param_names(fn)} - static
+            yield from self._check_function(ctx, fn, traced)
+
+    def _check_function(
+        self, ctx: ModuleContext, fn: ast.FunctionDef, traced: Set[str]
+    ) -> Iterator[Violation]:
+        taint = _Taint(traced)
+        yield from self._walk_block(ctx, fn.body, taint, fn.name)
+
+    def _walk_block(
+        self, ctx: ModuleContext, body, taint: "_Taint", fname: str
+    ) -> Iterator[Violation]:
+        for stmt in body:
+            yield from self._walk_stmt(ctx, stmt, taint, fname)
+
+    def _walk_stmt(
+        self, ctx: ModuleContext, stmt: ast.stmt, taint: "_Taint", fname: str
+    ) -> Iterator[Violation]:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return  # nested defs are separate scopes (closures handled as static)
+        for expr in _stmt_exprs(stmt):
+            yield from self._check_expr(ctx, expr, taint, fname)
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                taint.assign(t, stmt.value)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            taint.assign(stmt.target, stmt.value)
+        elif isinstance(stmt, ast.AugAssign):
+            if taint.mentions_traced(stmt.value):
+                taint._mark(stmt.target, True)
+        elif isinstance(stmt, (ast.If, ast.While)):
+            if taint.mentions_traced(stmt.test):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                yield self.violation(
+                    ctx, stmt,
+                    f"python '{kind}' on a traced value in jit-reachable "
+                    f"'{fname}' — use lax.cond/jnp.where (or mark the "
+                    "argument static)",
+                )
+            yield from self._walk_block(ctx, stmt.body, taint, fname)
+            yield from self._walk_block(ctx, stmt.orelse, taint, fname)
+            return
+        elif isinstance(stmt, ast.Assert):
+            if taint.mentions_traced(stmt.test):
+                yield self.violation(
+                    ctx, stmt,
+                    f"python 'assert' on a traced value in jit-reachable "
+                    f"'{fname}' — use checkify or a static property",
+                )
+        elif isinstance(stmt, ast.For):
+            taint.for_targets(stmt.target, stmt.iter)
+            yield from self._walk_block(ctx, stmt.body, taint, fname)
+            yield from self._walk_block(ctx, stmt.orelse, taint, fname)
+            return
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            yield from self._walk_block(ctx, stmt.body, taint, fname)
+            return
+        elif isinstance(stmt, ast.Try):
+            for blk in (stmt.body, stmt.orelse, stmt.finalbody):
+                yield from self._walk_block(ctx, blk, taint, fname)
+            for h in stmt.handlers:
+                yield from self._walk_block(ctx, h.body, taint, fname)
+            return
+
+    def _check_expr(
+        self, ctx: ModuleContext, expr: ast.AST, taint: "_Taint", fname: str
+    ) -> Iterator[Violation]:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(ctx, node, taint, fname)
+            elif isinstance(node, ast.IfExp) and taint.mentions_traced(node.test):
+                yield self.violation(
+                    ctx, node,
+                    f"python ternary on a traced value in jit-reachable "
+                    f"'{fname}' — use jnp.where",
+                )
+
+    def _check_call(
+        self, ctx: ModuleContext, node: ast.Call, taint: "_Taint", fname: str
+    ) -> Iterator[Violation]:
+        func = node.func
+        if (
+            isinstance(func, ast.Attribute)
+            and func.attr in _HOST_SYNC_METHODS
+        ):
+            yield self.violation(
+                ctx, node,
+                f".{func.attr}() in jit-reachable '{fname}' forces a "
+                "device→host sync under trace",
+            )
+            return
+        if (
+            isinstance(func, ast.Name)
+            and func.id in _HOST_CASTS
+            and node.args
+            and taint.mentions_traced(node.args[0])
+        ):
+            yield self.violation(
+                ctx, node,
+                f"{func.id}() on a traced value in jit-reachable "
+                f"'{fname}' raises TracerConversionError under jit",
+            )
+            return
+        if (
+            isinstance(func, ast.Attribute)
+            and isinstance(func.value, ast.Name)
+            and func.value.id in _NUMPY_ALIASES
+            and func.attr not in _NP_SAFE_ATTRS
+            and any(taint.mentions_traced(a) for a in node.args)
+        ):
+            yield self.violation(
+                ctx, node,
+                f"np.{func.attr}() on a traced value in jit-reachable "
+                f"'{fname}' — use jnp (numpy forces a host round-trip)",
+            )
+
+
+def _stmt_exprs(stmt: ast.stmt):
+    """Expressions evaluated by a statement, excluding nested blocks."""
+    for field in ("value", "test", "iter", "exc", "msg"):
+        v = getattr(stmt, field, None)
+        if isinstance(v, ast.AST):
+            yield v

@@ -1,0 +1,167 @@
+"""XMR003 — bounded cardinality for jit static arguments.
+
+Every distinct value of a ``static_argnames`` argument compiles a fresh XLA
+program. The serving stack keeps the jit cache bounded by construction:
+batch sizes go through the power-of-two bucket tiers
+(``XMRServingEngine.bucket_for``), and every other static is a config knob
+or per-tree constant. A call site that feeds a static parameter a raw
+``len(...)`` / ``x.shape[...]`` / ``x.size`` value — unbounded cardinality
+under live traffic — is a jit-cache explosion waiting for a traffic pattern,
+which this rule flags at the call site.
+
+Detection is per-module: jitted callables are recognized the same way as in
+XMR002 (decorator or ``jax.jit(f, …)`` / ``functools.partial(jax.jit, …)``
+assignment), positional arguments are mapped through the wrapped function's
+signature, and an expression is *unbounded* when it derives from ``len()``,
+``.shape``, ``.size`` or ``.nbytes`` — directly or through a local variable
+— without passing through a recognized bucketing call (a function whose
+name contains ``bucket``, ``pow2``, ``power_of_two``, ``tier`` or
+``quantize``). Constants, config attributes, and plain parameters are
+bounded by presumption: the rule targets the one hazard class this repo has
+actually shipped guards for (raw batch sizes bypassing the bucket tiers).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set
+
+from tools.xmrlint.core import (
+    ModuleContext,
+    Rule,
+    Violation,
+    dotted_name,
+    enclosing_function,
+    register,
+)
+from tools.xmrlint.rules.xmr002_trace_safety import _JitRoots, _param_names
+
+_BUCKETING_RE = re.compile(r"bucket|pow2|power_of_two|tier|quantiz", re.I)
+_UNBOUNDED_ATTRS = {"shape", "size", "nbytes"}
+
+
+def _is_bucketing_call(node: ast.Call) -> bool:
+    name = dotted_name(node.func) or ""
+    return bool(_BUCKETING_RE.search(name.split(".")[-1]))
+
+
+class _BoundednessScope:
+    """Tracks which local names derive from unbounded size expressions."""
+
+    def __init__(self) -> None:
+        self.unbounded: Set[str] = set()
+
+    def is_unbounded(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Call):
+            if _is_bucketing_call(node):
+                return False  # bucketing collapses cardinality
+            fname = dotted_name(node.func)
+            if fname == "len":
+                return True
+            if fname == "min":
+                # min() against any bounded value is a clamp: an integer
+                # size clamped to k takes at most k+1 distinct values.
+                return all(self.is_unbounded(a) for a in node.args)
+            return any(self.is_unbounded(a) for a in node.args) or any(
+                kw.value is not None and self.is_unbounded(kw.value)
+                for kw in node.keywords
+            )
+        if isinstance(node, ast.Attribute):
+            if node.attr in _UNBOUNDED_ATTRS:
+                return True
+            return False  # config/tree attributes: bounded per deployment
+        if isinstance(node, ast.Subscript):
+            return self.is_unbounded(node.value)
+        if isinstance(node, ast.Name):
+            return node.id in self.unbounded
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_unbounded(node.left) or self.is_unbounded(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_unbounded(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.is_unbounded(node.body) or self.is_unbounded(node.orelse)
+        return False
+
+    def track(self, fn: ast.AST, until_line: int) -> None:
+        """Replay local assignments textually before a call site, in order.
+
+        Order matters: ``width = parent_ids.shape[1]`` followed by the beam
+        recurrence ``width = min(next_b, width * branching)`` leaves the name
+        *bounded* — the clamp re-assignment closest above the call wins.
+        """
+        assigns = [
+            node
+            for node in ast.walk(fn)
+            if isinstance(node, ast.Assign)
+            and getattr(node, "lineno", 0) <= until_line
+        ]
+        for node in sorted(assigns, key=lambda n: n.lineno):
+            unbounded = self.is_unbounded(node.value)
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        if unbounded:
+                            self.unbounded.add(n.id)
+                        else:
+                            self.unbounded.discard(n.id)
+
+
+@register
+class RecompileHazardRule(Rule):
+    id = "XMR003"
+    name = "recompile-hazard"
+    description = (
+        "jit static_argnames arguments must have bounded cardinality — "
+        "route raw sizes through the power-of-two bucket tiers"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Violation]:
+        roots = _JitRoots(ctx)
+        if not roots.roots:
+            return
+        signatures: Dict[str, List[str]] = {
+            name: [a.arg for a in _param_names(roots.functions[name])]
+            for name in roots.roots
+            if name in roots.functions
+        }
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = dotted_name(node.func)
+            if callee is None or callee not in roots.roots:
+                continue
+            statics = roots.roots[callee]
+            if not statics:
+                continue
+            params = signatures.get(callee, [])
+            yield from self._check_site(ctx, node, callee, statics, params)
+
+    def _check_site(
+        self,
+        ctx: ModuleContext,
+        call: ast.Call,
+        callee: str,
+        statics: Set[str],
+        params: List[str],
+    ) -> Iterator[Violation]:
+        scope = _BoundednessScope()
+        fn = enclosing_function(call)
+        if fn is not None:
+            scope.track(fn, getattr(call, "lineno", 10**9))
+        bindings = []
+        for i, arg in enumerate(call.args):
+            if i < len(params) and params[i] in statics:
+                bindings.append((params[i], arg))
+        for kw in call.keywords:
+            if kw.arg in statics:
+                bindings.append((kw.arg, kw.value))
+        for name, value in bindings:
+            if scope.is_unbounded(value):
+                yield self.violation(
+                    ctx, value,
+                    f"static arg '{name}' of jitted '{callee}' receives an "
+                    "unbounded-cardinality size expression — every distinct "
+                    "value compiles a fresh XLA program; route it through "
+                    "the power-of-two bucket tiers (e.g. bucket_for())",
+                )

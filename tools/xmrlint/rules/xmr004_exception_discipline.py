@@ -1,0 +1,99 @@
+"""XMR004 — typed-exception discipline in the serving/index namespaces.
+
+The v1 wire maps *typed* serving errors to HTTP statuses
+(``Overloaded``→429, ``DeadlineExceeded``→504, ``WorkerUnavailable``→503);
+an ``except Exception:`` that silently swallows breaks that contract — the
+launcher's partial-launch cleanup once ate the very failure that explained
+a dead fleet. In ``serving/`` and ``index/`` modules, a broad handler
+(``except Exception`` / ``except BaseException``) must do at least one of:
+
+* **re-raise** (a bare ``raise`` or ``raise X from e`` anywhere in the body),
+* **log** (any ``log``/``logger``/``logging`` call, ``warnings.warn``, or a
+  ``traceback.print_*``),
+* **use the caught exception** — bind it (``as exc``) and reference it in
+  the body: converting to a typed error, failing a future
+  (``set_exception(exc)``), or recording it in diagnostic state all count.
+
+A handler that binds nothing and does none of the above is a silent
+swallow. The fix is usually three tokens: bind the exception and log it.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.xmrlint.core import ModuleContext, Rule, Violation, register
+
+_BROAD = {"Exception", "BaseException"}
+_LOG_ROOTS = {"log", "logger", "logging", "warnings", "traceback"}
+_SCOPES = ("serving/", "index/")
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    names = []
+    if isinstance(t, ast.Name):
+        names = [t.id]
+    elif isinstance(t, ast.Tuple):
+        names = [e.id for e in t.elts if isinstance(e, ast.Name)]
+    return any(n in _BROAD for n in names)
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    return any(isinstance(n, ast.Raise) for n in ast.walk(handler))
+
+
+def _logs(handler: ast.ExceptHandler) -> bool:
+    for node in ast.walk(handler):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        root = None
+        if isinstance(f, ast.Attribute):
+            cur = f
+            while isinstance(cur, ast.Attribute):
+                cur = cur.value
+            if isinstance(cur, ast.Name):
+                root = cur.id
+        elif isinstance(f, ast.Name):
+            root = f.id
+        if root in _LOG_ROOTS:
+            return True
+    return False
+
+
+def _uses_bound_exc(handler: ast.ExceptHandler) -> bool:
+    if handler.name is None:
+        return False
+    for node in ast.walk(handler):
+        if isinstance(node, ast.Name) and node.id == handler.name:
+            if isinstance(node.ctx, ast.Load):
+                return True
+    return False
+
+
+@register
+class ExceptionDisciplineRule(Rule):
+    id = "XMR004"
+    name = "typed-exception-discipline"
+    description = (
+        "broad 'except Exception' in serving/index must re-raise, log, or "
+        "convert to a typed serving error — never swallow silently"
+    )
+
+    def applies_to(self, ctx: ModuleContext) -> bool:
+        return any(s in ctx.relpath for s in _SCOPES)
+
+    def check(self, ctx: ModuleContext) -> Iterator[Violation]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler) or not _is_broad(node):
+                continue
+            if _reraises(node) or _logs(node) or _uses_bound_exc(node):
+                continue
+            yield self.violation(
+                ctx, node,
+                "broad exception handler swallows the failure silently — "
+                "log the cause, re-raise, or convert to a typed serving "
+                "error (WorkerUnavailable / ServingError)",
+            )

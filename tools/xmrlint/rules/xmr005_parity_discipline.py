@@ -1,0 +1,101 @@
+"""XMR005 — bitwise-parity discipline: sentinels and canonical selection.
+
+The house contract is bitwise identity across every serving path (grouped
+kernel, partitions, pipelined fleet, the JSON wire). Two statically
+checkable ways to break it:
+
+**Sentinel equality.** ``NEG_INF`` is a *score value* (-1e30), not a tag:
+masked entries are re-derived through ``jnp.where`` every level, and real
+scores can reach it through arithmetic. ``x == NEG_INF`` / ``x != NEG_INF``
+is therefore a latent logic error everywhere — membership must come from
+the mask that produced the sentinel (or an ordering test), never from
+float equality.
+
+**Ad-hoc beam selection.** Canonical ``(score desc, id asc)`` tie-breaking
+lives in exactly three helpers: ``beam_select`` (the two-key sort),
+``_local_select`` (the id-presorted ``top_k`` whose lowest-index tie-break
+*is* the canonical order), and ``topk_canonical``/``merge_topk`` (the merge
+primitive). A raw ``lax.top_k`` or ``lax.sort`` selection anywhere else in
+the serving stack (``repro/core``, ``repro/index``, ``repro/serving``) can
+disagree with them on ties — exactly the class of drift the partition/fleet
+parity tests exist to catch, caught here before it compiles.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from tools.xmrlint.core import (
+    ModuleContext,
+    Rule,
+    Violation,
+    dotted_name,
+    enclosing_function,
+    register,
+)
+
+_SENTINELS = {"NEG_INF"}
+#: Functions allowed to call lax.top_k / lax.sort directly — the canonical
+#: selection helpers whose tie-break semantics the parity tests pin.
+_CANONICAL_FNS = {"beam_select", "_local_select", "merge_topk", "topk_canonical"}
+_SELECT_CALLS = {"top_k", "sort"}
+_STACK_SCOPES = ("repro/core/", "repro/index/", "repro/serving/")
+
+
+def _is_sentinel(node: ast.AST) -> bool:
+    name = dotted_name(node)
+    return name is not None and name.split(".")[-1] in _SENTINELS
+
+
+@register
+class ParityDisciplineRule(Rule):
+    id = "XMR005"
+    name = "parity-discipline"
+    description = (
+        "no float == against NEG_INF sentinels; beam selection via lax."
+        "top_k/sort only inside the canonical helpers"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Violation]:
+        yield from self._check_sentinel_eq(ctx)
+        if any(s in ctx.relpath for s in _STACK_SCOPES):
+            yield from self._check_adhoc_select(ctx)
+
+    def _check_sentinel_eq(self, ctx: ModuleContext) -> Iterator[Violation]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            if not any(isinstance(op, (ast.Eq, ast.NotEq)) for op in node.ops):
+                continue
+            operands = [node.left, *node.comparators]
+            if any(_is_sentinel(o) for o in operands):
+                yield self.violation(
+                    ctx, node,
+                    "float equality against the NEG_INF sentinel — masked "
+                    "entries are re-derived scores, not tags; use the "
+                    "producing mask (or an ordering test) instead",
+                )
+
+    def _check_adhoc_select(self, ctx: ModuleContext) -> Iterator[Violation]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            parts = name.split(".")
+            if parts[-1] not in _SELECT_CALLS:
+                continue
+            if "lax" not in parts[:-1]:
+                continue  # jnp.sort on host-side prep etc. is out of scope
+            fn = enclosing_function(node)
+            if fn is not None and fn.name in _CANONICAL_FNS:
+                continue
+            yield self.violation(
+                ctx, node,
+                f"ad-hoc beam selection via {name} outside the canonical "
+                "helpers (beam_select/_local_select/topk_canonical) — its "
+                "tie-break order can disagree with the bitwise parity "
+                "contract; route through the canonical helpers",
+            )

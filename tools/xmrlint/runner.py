@@ -1,0 +1,225 @@
+"""File discovery, the lint driver, reporters, and the CLI entry point.
+
+``lint_paths`` is the programmatic API the tests use; ``main`` is what
+``python -m tools.xmrlint`` calls. Exit codes: 0 clean, 1 violations (or
+stale baseline entries under ``--strict-baseline``), 2 usage/parse errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from tools.xmrlint.core import (
+    Baseline,
+    ModuleContext,
+    Rule,
+    Violation,
+    all_rules,
+    run_rules,
+)
+
+#: Directory names never descended into during recursive discovery.
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", ".mypy_cache"}
+#: Fixture trees carry *seeded* violations; recursive discovery skips them,
+#: but naming a fixture file explicitly on the CLI still lints it (that is
+#: how the test suite drives each rule).
+_SKIP_REL = ("tests/fixtures/xmrlint",)
+
+
+def discover(paths: Sequence[Path], root: Path) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_file():
+            out.append(p)
+            continue
+        if not p.is_dir():
+            raise FileNotFoundError(f"no such file or directory: {p}")
+        for f in sorted(p.rglob("*.py")):
+            if any(part in _SKIP_DIRS for part in f.parts):
+                continue
+            rel = _relpath(f, root)
+            if any(rel.startswith(skip) for skip in _SKIP_REL):
+                continue
+            out.append(f)
+    return out
+
+
+def _relpath(path: Path, root: Path) -> str:
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def lint_paths(
+    paths: Sequence[Path],
+    *,
+    root: Optional[Path] = None,
+    rules: Optional[Iterable[Rule]] = None,
+    baseline: Optional[Baseline] = None,
+) -> Tuple[List[Violation], List[Violation], List[dict], int]:
+    """Lint ``paths``; returns ``(new, baselined, stale_entries, n_files)``.
+
+    ``new`` are violations not covered by the baseline (these gate CI);
+    ``baselined`` are matched by a baseline entry; ``stale_entries`` are
+    baseline entries whose violation no longer exists.
+    """
+    root = root or Path.cwd()
+    active = list((rules if rules is not None else all_rules().values()))
+    files = discover([Path(p) for p in paths], root)
+    violations: List[Violation] = []
+    errors: List[str] = []
+    for f in files:
+        try:
+            ctx = ModuleContext.from_file(f, root)
+        except (SyntaxError, UnicodeDecodeError) as exc:
+            errors.append(f"{_relpath(f, root)}: unparseable: {exc}")
+            continue
+        violations.extend(run_rules(ctx, active))
+    if errors:
+        raise SyntaxError("; ".join(errors))
+    violations.sort(key=lambda v: (v.path, v.line, v.col, v.rule))
+    base = baseline or Baseline()
+    new = [v for v in violations if not base.contains(v)]
+    old = [v for v in violations if base.contains(v)]
+    return new, old, base.stale_entries(violations), len(files)
+
+
+def _report_text(
+    new: List[Violation], old: List[Violation], stale: List[dict],
+    n_files: int, out,
+) -> None:
+    for v in new:
+        print(v.text(), file=out)
+    for e in stale:
+        print(
+            f"{e['path']}: stale baseline entry for {e['rule']} "
+            f"(fingerprint {e['fingerprint']}) — the violation is gone; "
+            "delete the entry",
+            file=out,
+        )
+    summary = (
+        f"xmrlint: {n_files} file(s), {len(new)} violation(s)"
+        + (f", {len(old)} baselined" if old else "")
+        + (f", {len(stale)} stale baseline entrie(s)" if stale else "")
+    )
+    print(summary, file=out)
+
+
+def _report_json(
+    new: List[Violation], old: List[Violation], stale: List[dict],
+    n_files: int, out,
+) -> None:
+    doc = {
+        "version": 1,
+        "files": n_files,
+        "violations": [v.to_json() for v in new],
+        "baselined": [v.to_json() for v in old],
+        "stale_baseline_entries": stale,
+        "counts": _counts(new),
+    }
+    json.dump(doc, out, indent=2)
+    out.write("\n")
+
+
+def _counts(violations: List[Violation]) -> dict:
+    counts: dict = {}
+    for v in violations:
+        counts[v.rule] = counts.get(v.rule, 0) + 1
+    return counts
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.xmrlint",
+        description="Repo-specific static analysis for the XMR serving stack.",
+    )
+    ap.add_argument("paths", nargs="*", default=["src"], help="files or directories")
+    ap.add_argument(
+        "--format", choices=("text", "json"), default="text", dest="fmt"
+    )
+    ap.add_argument(
+        "--baseline",
+        default=str(Path(__file__).parent / "baseline.json"),
+        help="baseline-suppression file (default: tools/xmrlint/baseline.json)",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true",
+        help="ignore the baseline file (report everything)",
+    )
+    ap.add_argument(
+        "--write-baseline", action="store_true",
+        help="write current violations to the baseline file and exit 0; "
+        "edit in the mandatory per-entry justifications afterwards",
+    )
+    ap.add_argument(
+        "--select", default="",
+        help="comma-separated rule ids to run (default: all)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalogue"
+    )
+    ap.add_argument(
+        "--strict-baseline", action="store_true",
+        help="stale baseline entries fail the run (CI keeps the file honest)",
+    )
+    args = ap.parse_args(argv)
+
+    registry = all_rules()
+    if args.list_rules:
+        for rid in sorted(registry):
+            r = registry[rid]
+            print(f"{rid}  {r.name}\n    {r.description}")
+        return 0
+
+    rules: Optional[List[Rule]] = None
+    if args.select:
+        wanted = [s.strip() for s in args.select.split(",") if s.strip()]
+        unknown = [w for w in wanted if w not in registry]
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)}", file=sys.stderr)
+            return 2
+        rules = [registry[w] for w in wanted]
+
+    baseline_path = Path(args.baseline)
+    try:
+        baseline = (
+            Baseline() if (args.no_baseline or args.write_baseline)
+            else Baseline.load(baseline_path)
+        )
+    except (ValueError, json.JSONDecodeError) as exc:
+        print(f"bad baseline: {exc}", file=sys.stderr)
+        return 2
+
+    try:
+        new, old, stale, n_files = lint_paths(
+            args.paths, rules=rules, baseline=baseline
+        )
+    except (FileNotFoundError, SyntaxError) as exc:
+        print(str(exc), file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        Baseline.from_violations(
+            new, justification="TODO: justify or fix (entry written by "
+            "--write-baseline)"
+        ).save(baseline_path)
+        print(
+            f"wrote {len(new)} entrie(s) to {baseline_path}; fill in real "
+            "justifications before committing",
+        )
+        return 0
+
+    if args.fmt == "json":
+        _report_json(new, old, stale, n_files, sys.stdout)
+    else:
+        _report_text(new, old, stale, n_files, sys.stdout)
+    if new:
+        return 1
+    if stale and args.strict_baseline:
+        return 1
+    return 0
