@@ -13,7 +13,11 @@ nonzero exit. Structural rows are always strict: a ``<flag>=False`` for any
 flag in ``STRUCT_FLAGS`` (bitwise identity, batch amortization, overload
 P99 boundedness, nonzero shed under 4x load, pipelined/overlap/cache
 claims) in any derived field fails the check regardless of mode — those
-encode correctness/behavioral claims, not wall-clock.
+encode correctness/behavioral claims, not wall-clock. Numeric *tolerance*
+rows (``metric=value<=bound`` / ``metric=value>=floor`` in a derived field
+— the quantized tier's measured recall/MAE/memory contract) are equally
+strict, and enjoy the same missing-row protection: a baseline row carrying
+either kind of claim may not silently disappear from the current run.
 
 The fresh JSON must also carry ``"completed": true`` (benchmarks.run stamps
 it) — a crashed run's partial artifact must never pass the gate vacuously.
@@ -37,6 +41,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import re
 import sys
 from typing import Dict, List, Tuple
 
@@ -60,6 +65,18 @@ STRUCT_FLAGS = (
     "gateway_parity",              # HTTP + fleet RPC == in-process, bitwise
     "recovery_bounded",            # supervisor respawned within the bound
     "degraded_parity",             # degraded responses survivor-exact
+    "quant_kernel_parity",         # grouped_q == grouped on dequantized f32
+    "quant_tier_parity",           # int8 tier bitwise across P x sync modes
+)
+
+# Numeric tolerance claims in derived fields: ``name=value<=bound`` /
+# ``name=value>=floor`` — the quantized tier's *measured contract* (recall@k
+# floor, score-MAE bound, memory-shrink floor). Like STRUCT_FLAGS they are
+# always strict: a breached bound encodes a broken accuracy/memory contract,
+# not wall-clock drift, so it fails the gate in every mode.
+_TOLERANCE_RE = re.compile(
+    r"([A-Za-z_]\w*)=(-?[\d.]+(?:[eE][-+]?\d+)?)"
+    r"(<=|>=)(-?[\d.]+(?:[eE][-+]?\d+)?)"
 )
 
 
@@ -69,6 +86,21 @@ def _failed_flags(derived: str) -> List[str]:
 
 def _has_flags(derived: str) -> bool:
     return any(f"{f}=" in derived for f in STRUCT_FLAGS)
+
+
+def _failed_tolerances(derived: str) -> List[str]:
+    """Breached ``name=value<=bound`` / ``name=value>=floor`` claims."""
+    out = []
+    for name, value, op, bound in _TOLERANCE_RE.findall(derived):
+        v, b = float(value), float(bound)
+        ok = v <= b if op == "<=" else v >= b
+        if not ok:
+            out.append(f"{name}={value} violates {op}{bound}")
+    return out
+
+
+def _has_tolerances(derived: str) -> bool:
+    return bool(_TOLERANCE_RE.search(derived))
 
 
 def _rows_by_name(doc: dict) -> Dict[str, dict]:
@@ -125,6 +157,8 @@ def compare(
         derived = row.get("derived", "")
         if _failed_flags(derived):
             failures.append(f"{name}: structural flag failed ({derived})")
+        for breach in _failed_tolerances(derived):
+            failures.append(f"{name}: tolerance breached ({breach})")
         b = base.get(name)
         if b is None or b.get("us_per_call", 0) <= 0:
             continue
@@ -153,7 +187,8 @@ def compare(
     for name in missing:
         line = f"{name:55s} (row disappeared from current run)"
         b_derived = base[name].get("derived", "")
-        if _is_counter(name) or _has_flags(b_derived):
+        if _is_counter(name) or _has_flags(b_derived) \
+                or _has_tolerances(b_derived):
             line += "  << MISSING STRUCTURAL ROW"
             if missing_gates:
                 # Dropping a structural row must not quietly pass the gate —
@@ -263,6 +298,7 @@ def main(argv=None) -> int:
     structural = [
         f for f in failures
         if "structural" in f or "counter" in f or "incomplete" in f
+        or "tolerance" in f
     ]
     timing = [f for f in failures if f not in structural]
     for fail in failures:

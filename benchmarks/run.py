@@ -53,7 +53,7 @@ def main() -> int:
 
     from benchmarks import (bench_enterprise, bench_gateway, bench_mscm,
                             bench_napkin, bench_parallel, bench_partitioned,
-                            bench_serving, bench_xmr_head)
+                            bench_quant, bench_serving, bench_xmr_head)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -116,6 +116,12 @@ def main() -> int:
     # flag (bitwise vs in-process) gates via check_regression.
     emit("gateway", bench_gateway.run,
          n_queries=32 if not args.full else 128)
+    # Quantized serving tiers (ISSUE 9): int8 / pruned-int8 chunk storage —
+    # memory-shrink floor, recall floor and score-MAE bound ride along as
+    # tolerance rows; kernel/tier parity flags gate via check_regression.
+    emit("quant", bench_quant.run,
+         n_queries=16 if not args.full else 64,
+         beams=(10,) if not args.full else (4, 10))
     emit("xmr_head", bench_xmr_head.run)
     if not args.skip_enterprise:
         emit("enterprise", bench_enterprise.run,

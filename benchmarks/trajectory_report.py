@@ -1,0 +1,115 @@
+"""Render the rolling ``BENCH_trajectory.jsonl`` artifact as markdown.
+
+The trajectory file accumulates one summary row per CI run (appended by
+``check_regression --append-trajectory``): sha, run id, wall seconds and a
+``{row name: us_per_call}`` map. This tool turns the window into a compact
+markdown table — per benchmark row: first/last/min/max microseconds over
+the window and the last/first drift ratio — so the perf history is readable
+in a job's step summary instead of requiring an artifact download.
+
+CI (bench-smoke) appends the output to ``$GITHUB_STEP_SUMMARY`` right after
+the trend check. Exit is always 0 for an empty or missing file: the first
+run on a branch has no trajectory yet, and a report must never gate.
+
+Run: ``python -m benchmarks.trajectory_report BENCH_trajectory.jsonl
+[--limit 20] [--top 40]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def load_rows(path: str) -> List[dict]:
+    """Parse the JSONL window, skipping lines that fail to parse (a torn
+    append from a cancelled run must not take the whole report down)."""
+    out = []
+    try:
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    doc = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if isinstance(doc, dict) and isinstance(doc.get("rows"), dict):
+                    out.append(doc)
+    except OSError:
+        return []
+    return out
+
+
+def _fmt_us(v: float) -> str:
+    return f"{v:,.0f}"
+
+
+def render(runs: List[dict], *, top: int = 40) -> str:
+    """Markdown report for a window of trajectory rows (oldest first)."""
+    if not runs:
+        return ("### Perf trajectory\n\n"
+                "No trajectory rows yet (first run on this branch?).\n")
+    latest = runs[-1]
+    sha = (latest.get("sha") or "")[:9]
+    lines = [
+        "### Perf trajectory",
+        "",
+        f"{len(runs)} run(s) in window — latest `{sha or 'local'}`"
+        f" (wall {latest.get('wall_s', '?')}s,"
+        f" completed={latest.get('completed')})",
+        "",
+        "| benchmark row | first us | last us | min us | max us | last/first |",
+        "|---|---:|---:|---:|---:|---:|",
+    ]
+    # Per-name series over the window; report names present in the latest
+    # run (ordered by drift so regressions float to the top), and call out
+    # names that vanished from it — a disappeared row is itself a signal.
+    series: Dict[str, List[float]] = {}
+    for run in runs:
+        for name, us in run["rows"].items():
+            series.setdefault(name, []).append(float(us))
+    current = set(latest["rows"])
+
+    def drift(name: str) -> float:
+        s = series[name]
+        return (s[-1] / s[0]) if s[0] > 0 else 1.0
+
+    reported = sorted(current, key=drift, reverse=True)
+    for name in reported[:top]:
+        s = series[name]
+        ratio = f"{drift(name):.2f}x" if s[0] > 0 else "—"
+        lines.append(
+            f"| `{name}` | {_fmt_us(s[0])} | {_fmt_us(s[-1])} "
+            f"| {_fmt_us(min(s))} | {_fmt_us(max(s))} | {ratio} |"
+        )
+    if len(reported) > top:
+        lines.append(f"| … {len(reported) - top} more row(s) | | | | | |")
+    gone = sorted(set(series) - current)
+    if gone:
+        lines += ["", "Rows no longer present in the latest run: "
+                  + ", ".join(f"`{n}`" for n in gone)]
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trajectory", help="rolling BENCH_trajectory.jsonl")
+    ap.add_argument("--limit", type=int, default=20,
+                    help="use only the newest N runs (0 = all)")
+    ap.add_argument("--top", type=int, default=40,
+                    help="report at most N benchmark rows, worst drift first")
+    args = ap.parse_args(argv)
+    runs = load_rows(args.trajectory)
+    if args.limit > 0:
+        runs = runs[-args.limit:]
+    sys.stdout.write(render(runs, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,9 +16,14 @@ production settings:
   the socket RPC. Demo queries are driven through real HTTP requests and a
   curl recipe is printed for poking the running server.
 
+``--tier int8`` (or ``int8_pruned`` / ``fp8``) serves a compressed storage
+tier (:mod:`repro.quant`): per-partition memory shrinks several-fold and
+the printed manifest shows the compressed bytes + tier/dtype columns;
+quality vs the exact tier is reported as recall instead of bitwise parity.
+
     PYTHONPATH=src python examples/serve_search.py [--queries 256] [--small]
     PYTHONPATH=src python examples/serve_search.py --small --gateway 8080 \\
-        [--partitions 2]
+        [--partitions 2] [--tier int8]
 """
 
 import argparse
@@ -37,12 +42,14 @@ from repro.serving import (
     BatchPolicy,
     MicroBatcher,
     PartitionConfig,
+    QuantConfig,
     Query,
     QueryResult,
     ServeConfig,
     ServingGateway,
     XMRServingEngine,
 )
+from repro.serving.config import QUANT_TIERS
 
 
 def main() -> None:
@@ -62,7 +69,14 @@ def main() -> None:
                     help="serve over HTTP on this port (0 = ephemeral); "
                          "with --partitions > 1 the engine runs against a "
                          "cross-process worker fleet")
+    ap.add_argument("--tier", default="exact", choices=QUANT_TIERS,
+                    help="weight storage tier (repro.quant): int8 / "
+                         "int8_pruned cut per-partition memory several-"
+                         "fold; fp8 is in-process only (no fleet wire)")
     args = ap.parse_args()
+    if args.tier == "fp8" and args.gateway is not None and args.partitions > 1:
+        ap.error("--tier fp8 cannot ship over the fleet RPC wire; "
+                 "use --tier int8 with --partitions > 1")
 
     if args.small:
         shape = XMRShape("search-32k", 337_067, 32_768, 10_000, 100, 64)
@@ -87,11 +101,16 @@ def main() -> None:
         return
 
     print("\n== batch setting (Table 4 panel) ==")
-    for method in ("mscm_dense", "mscm_searchsorted", "vanilla"):
+    # A non-exact tier forces the quantized kernel, so the per-method
+    # panel collapses to the single tier method.
+    methods = (("mscm_dense", "mscm_searchsorted", "vanilla")
+               if args.tier == "exact" else ("auto",))
+    for method in methods:
         eng = XMRServingEngine(
             tree,
             ServeConfig(beam=args.beam, topk=10, method=method,
-                        ell_width=256, max_batch=64),
+                        ell_width=256, max_batch=64,
+                        quant=QuantConfig(tier=args.tier)),
         )
         eng.warmup(shape.d, batch_sizes=(64,))
         t0 = time.time()
@@ -105,8 +124,11 @@ def main() -> None:
 
     print("\n== online setting (async micro-batching) ==")
     eng = XMRServingEngine(
-        tree, ServeConfig(beam=args.beam, topk=10, method="mscm_dense",
-                          ell_width=256, max_batch=64))
+        tree, ServeConfig(
+            beam=args.beam, topk=10,
+            method="mscm_dense" if args.tier == "exact" else "auto",
+            ell_width=256, max_batch=64,
+            quant=QuantConfig(tier=args.tier)))
     eng.warmup_buckets(shape.d, args.max_batch)
 
     n = min(args.queries, 128)
@@ -146,7 +168,8 @@ def serve_partitioned(tree, queries, shape, args) -> None:
 
     engine = XMRServingEngine(
         tree, ServeConfig(beam=args.beam, topk=10, max_batch=64,
-                          partition=PartitionConfig(partitions=p)))
+                          partition=PartitionConfig(partitions=p),
+                          quant=QuantConfig(tier=args.tier)))
     m = engine.index.manifest
     print(f"split level {m.level}; router {m.router_memory_bytes / 1e6:.1f} MB"
           f" (replicated); per-device max "
@@ -156,15 +179,22 @@ def serve_partitioned(tree, queries, shape, args) -> None:
     for info in m.partitions:
         print(f"  partition {info.pid}: labels [{info.label_start:>9,}, "
               f"{info.label_end:>9,})  {info.memory_bytes / 1e6:7.1f} MB  "
-              f"hash {info.content_hash}")
+              f"tier {info.tier}/{info.dtype}  hash {info.content_hash}")
 
     mb = MicroBatcher(engine, BatchPolicy(args.max_batch, args.max_wait_ms))
     with mb:
         res = [f.result(timeout=600) for f in mb.submit_csr(queries)]
     s = np.stack([r[0] for r in res])
     l = np.stack([r[1] for r in res])
-    identical = np.array_equal(s, ref_s) and np.array_equal(l, ref_l)
-    print(f"\nbitwise-identical to unpartitioned: {identical}")
+    if args.tier == "exact":
+        identical = np.array_equal(s, ref_s) and np.array_equal(l, ref_l)
+        print(f"\nbitwise-identical to unpartitioned: {identical}")
+    else:
+        from repro.quant import recall_at_k, score_mae
+
+        print(f"\nquantized tier '{args.tier}' vs exact: "
+              f"recall@10 {recall_at_k(ref_l, l):.4f}, "
+              f"score MAE {score_mae(ref_s, s, 10):.5f}")
     summ = mb.metrics.summary()
     print(f"partition occupancy (share of top-k per partition): "
           f"{summ.get('partition_occupancy')}")
@@ -181,10 +211,11 @@ def serve_gateway(tree, queries, args) -> None:
     requests so the printed numbers include the network edge.
     """
     p = args.partitions
-    cfg = ServeConfig(beam=args.beam, topk=10, max_batch=64)
+    quant = QuantConfig(tier=args.tier)
+    cfg = ServeConfig(beam=args.beam, topk=10, max_batch=64, quant=quant)
     if p > 1:
         cfg = ServeConfig(
-            beam=args.beam, topk=10, max_batch=64,
+            beam=args.beam, topk=10, max_batch=64, quant=quant,
             partition=PartitionConfig(partitions=p,
                                       partition_sync="pipelined"),
         )

@@ -27,9 +27,11 @@ from repro.core.beam import NEG_INF, beam_select, combine_scores
 from repro.core.chunked import ChunkedLayer, ColumnELLLayer
 from repro.sparse.csr import CSC
 
-# Masked-matmul method selection — every entry returns *identical* rankings
-# (the paper's "free of charge" property, pinned by tests); they differ only
-# in how the traversal maps to hardware:
+# Masked-matmul method selection — every exact entry returns *identical*
+# rankings (the paper's "free of charge" property, pinned by tests); they
+# differ only in how the traversal maps to hardware. The one exception is
+# the quantized tier's method (suffix ``_q``), which is exact *given its
+# compressed weights* but approximate against the f32 tree:
 #
 #   vanilla               per-column sparse dots (paper Alg. 4 baseline).
 #                         Correctness oracle; B× the traversal work.
@@ -54,6 +56,13 @@ from repro.sparse.csr import CSC
 #                         path — amortizes each chunk tile over up to QT
 #                         queries and keeps the whole traversal in one XLA
 #                         program.
+#   mscm_pallas_grouped_q the grouped kernel over *quantized* chunk tiles
+#                         (int8/fp8 + per-column scales, repro.quant):
+#                         dequantize-in-register before the tile matmul.
+#                         The one approximate member — bitwise-identical to
+#                         mscm_pallas_grouped on the *dequantized* weights,
+#                         but the weights themselves carry quantization
+#                         error (measured contract, benchmarks/bench_quant).
 METHODS = (
     "vanilla",
     "mscm_dense",
@@ -61,6 +70,7 @@ METHODS = (
     "mscm_pallas",
     "mscm_pallas_pregather",
     "mscm_pallas_grouped",
+    "mscm_pallas_grouped_q",
 )
 
 
@@ -142,7 +152,11 @@ class XMRTree:
     def memory_bytes(self) -> int:
         tot = 0
         for l in self.layers:
-            tot += sum(np.asarray(t).nbytes for t in (l.chunk_rows, l.chunk_vals))
+            tensors = [l.chunk_rows, l.chunk_vals]
+            scales = getattr(l, "chunk_scales", None)  # quantized layers
+            if scales is not None:
+                tensors.append(scales)
+            tot += sum(np.asarray(t).nbytes for t in tensors)
         return tot
 
     # -- split / extract (label-space partitioning, repro.index) -----------
@@ -308,14 +322,15 @@ def _masked_matmul(
         return ops.mscm_pallas(
             x_dense, layer.chunk_rows, layer.chunk_vals, block_q, block_c, variant=variant
         )
-    if method == "mscm_pallas_grouped":
-        # Dispatched directly in _tree_infer: the grouped kernel fuses the
+    if method in ("mscm_pallas_grouped", "mscm_pallas_grouped_q"):
+        # Dispatched directly in _tree_infer: the grouped kernels fuse the
         # σ⊗parent epilogue with the beam step, which needs the parent
         # scores this function never sees. Raw logits are available via
-        # ops.mscm_grouped_level(..., mode="none").
+        # ops.mscm_grouped_level / repro.quant.kernels.mscm_grouped_q_level
+        # with mode="none".
         raise ValueError(
-            "mscm_pallas_grouped is dispatched inside _tree_infer; "
-            "use repro.kernels.ops.mscm_grouped_level for a bare matmul"
+            f"{method} is dispatched inside _tree_infer; use the "
+            "mscm_grouped(_q)_level wrappers for a bare matmul"
         )
     raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
 
@@ -354,6 +369,23 @@ def level_combined(
             x_dense,
             layer.chunk_rows,
             layer.chunk_vals,
+            block_q,
+            block_c,
+            parent_scores.reshape(-1),
+            qt=qt,
+            mode=score_mode,
+        ).reshape(n, b_cur, branching)
+    if method == "mscm_pallas_grouped_q":
+        from repro.quant import kernels as qkernels  # local: tier is optional
+
+        # Quantized grouped path: same device grouping and fused epilogue,
+        # with the int8/fp8 chunk tile dequantized in-register against its
+        # per-column scale row (layer is a QuantLayerArrays).
+        return qkernels.mscm_grouped_q_level(
+            x_dense,
+            layer.chunk_rows,
+            layer.chunk_vals,
+            layer.chunk_scales,
             block_q,
             block_c,
             parent_scores.reshape(-1),
@@ -436,7 +468,8 @@ def _tree_infer(
 ) -> Tuple[jax.Array, jax.Array]:
     n = x_idx.shape[0]
     needs_dense = method in (
-        "mscm_dense", "mscm_pallas", "mscm_pallas_pregather", "mscm_pallas_grouped"
+        "mscm_dense", "mscm_pallas", "mscm_pallas_pregather",
+        "mscm_pallas_grouped", "mscm_pallas_grouped_q",
     )
     x_dense = mscm_lib.scatter_dense(x_idx, x_val, d) if needs_dense else None
 
@@ -472,7 +505,7 @@ def _tree_infer(
         parent_ids, scores = beam_select(
             chunk_ids, combined, n_cols[li], next_b
         )
-        if method == "mscm_pallas_grouped" and not is_last:
+        if method in ("mscm_pallas_grouped", "mscm_pallas_grouped_q") and not is_last:
             # Keep the beam id-ascending: children of a sorted beam are a
             # concatenation of sorted runs, so level l+1's block list
             # inherits level l's chunk-major discipline and the global

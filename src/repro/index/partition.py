@@ -33,7 +33,10 @@ import numpy as np
 
 from repro.core.tree import XMRTree
 
-MANIFEST_VERSION = 1
+# v2 adds the compressed-storage columns ``tier``/``dtype`` (repro.quant);
+# v1 manifests are still readable — the new columns default to the exact
+# tier. See src/repro/index/README.md for the schema history.
+MANIFEST_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +50,8 @@ class PartitionInfo:
     label_end: int
     memory_bytes: int     # resident chunked-weight bytes (incl. phantom pad)
     content_hash: str     # sha256 over the sliced layer tensors
+    tier: str = "exact"   # storage tier (repro.quant QUANT-prefixed or exact)
+    dtype: str = "float32"  # chunk_vals storage dtype actually resident
 
     @property
     def n_labels(self) -> int:
@@ -83,20 +88,31 @@ class PartitionManifest:
     @classmethod
     def from_json(cls, text: str) -> "PartitionManifest":
         doc = json.loads(text)
-        if doc.get("version") != MANIFEST_VERSION:
+        version = doc.get("version")
+        if version not in (1, MANIFEST_VERSION):
             raise ValueError(
-                f"manifest version {doc.get('version')} != {MANIFEST_VERSION}"
+                f"manifest version {version} not in (1, {MANIFEST_VERSION})"
             )
+        # v1 rows predate the storage-tier columns; the dataclass defaults
+        # (exact f32) describe every v1 partition correctly. Re-serialized
+        # manifests are written at the current version.
         parts = [PartitionInfo(**p) for p in doc.pop("partitions")]
         doc["branching"] = tuple(doc["branching"])
+        doc["version"] = MANIFEST_VERSION
         return cls(partitions=parts, **doc)
 
 
 def _content_hash(tree: XMRTree) -> str:
     h = hashlib.sha256()
     for lay in tree.layers:
-        for t in (lay.chunk_rows, lay.chunk_vals):
+        tensors = [lay.chunk_rows, lay.chunk_vals]
+        scales = getattr(lay, "chunk_scales", None)  # quantized layers
+        if scales is not None:
+            tensors.append(scales)
+        for t in tensors:
             a = np.asarray(t)
+            # dtype is part of the hashed header, so an int8 cut of the same
+            # weights can never collide with its f32 original.
             h.update(str((a.shape, str(a.dtype))).encode())
             h.update(a.tobytes())
     return h.hexdigest()[:16]

@@ -413,7 +413,15 @@ class ScatterGatherPlanner:
             ]
         self._needs_dense = method in (
             "mscm_dense", "mscm_pallas", "mscm_pallas_pregather",
-            "mscm_pallas_grouped",
+            "mscm_pallas_grouped", "mscm_pallas_grouped_q",
+        )
+        # The router head is always exact f32 (only the partitions are
+        # quantized — repro.quant.quantize_index), so a quantized method
+        # routes through its exact grouped twin: same grouping, same
+        # epilogue, f32 tiles.
+        self._router_method = (
+            "mscm_pallas_grouped"
+            if method == "mscm_pallas_grouped_q" else method
         )
         self.cache: Optional[HotBeamCache] = None
         if cache_entries:
@@ -550,7 +558,8 @@ class ScatterGatherPlanner:
         """Router head: the global beam after the levels above the split."""
         return self.index.head.infer(
             x_idx, x_val, beam=self.beam, topk=self.beam,
-            method=self.method, score_mode=self.score_mode, qt=self.qt,
+            method=self._router_method, score_mode=self.score_mode,
+            qt=self.qt,
         )
 
     def _active_partitions(self, parent_ids: jax.Array) -> List[int]:

@@ -1,0 +1,55 @@
+"""Compressed-weight serving tier (ROADMAP: quantized storage).
+
+The leaf ranker layer dominates per-partition model memory (paper §5/§6);
+Lin et al. (arXiv 2410.09554) show tree-linear XMC weights tolerate
+aggressive low-precision storage and magnitude pruning with tiny precision
+loss. This package turns that into a serving *tier*:
+
+* :mod:`repro.quant.storage` — per-(chunk, column) symmetric quantization of
+  the ELL chunk weights (int8 everywhere, fp8-e4m3 where the backend has the
+  dtype) plus an optional magnitude-pruned ELL re-pack that shrinks the pad
+  width R, producing a :class:`QuantizedTree` that round-trips through
+  ``repro.checkpoint`` and the :class:`~repro.index.partition
+  .PartitionManifest` (tier/dtype recorded per partition, folded into
+  ``content_hash``).
+* :mod:`repro.quant.kernels` — the ``method="mscm_pallas_grouped_q"`` Pallas
+  path: dequantize-in-register inside the grouped tile matmul, reusing the
+  fused σ⊗parent epilogue and the canonical ``beam_select`` unchanged.
+* :mod:`repro.quant.contract` — the *measured* accuracy contract (recall@k
+  floor, score MAE bound) the tier ships with instead of a bitwise claim;
+  gated by ``benchmarks/bench_quant.py`` + ``check_regression``.
+
+Selected via ``ServeConfig(quant=QuantConfig(tier="int8"))`` — see
+:mod:`repro.serving.config`.
+"""
+
+from repro.quant.contract import recall_at_k, score_mae, topk_scores
+from repro.quant.kernels import mscm_grouped_q, mscm_grouped_q_level
+from repro.quant.storage import (
+    QUANT_DTYPES,
+    QuantLayerArrays,
+    QuantizedTree,
+    dequantize_layer,
+    dequantize_tree,
+    prune_chunks,
+    quantize_index,
+    quantize_layer,
+    quantize_tree,
+)
+
+__all__ = [
+    "QUANT_DTYPES",
+    "QuantLayerArrays",
+    "QuantizedTree",
+    "dequantize_layer",
+    "dequantize_tree",
+    "mscm_grouped_q",
+    "mscm_grouped_q_level",
+    "prune_chunks",
+    "quantize_index",
+    "quantize_layer",
+    "quantize_tree",
+    "recall_at_k",
+    "score_mae",
+    "topk_scores",
+]

@@ -1,0 +1,57 @@
+"""The quantized tier's measured accuracy contract.
+
+Exactness is the house style — every exact method returns *identical*
+rankings, pinned by bitwise tests. A compressed tier cannot make that claim,
+so it ships with a **measured contract** instead: recall@k against the f32
+reference ranking stays above a floor, and the top-k score MAE stays below a
+bound, both swept by ``benchmarks/bench_quant.py`` and gated as numeric
+tolerance rows in ``benchmarks/check_regression.py``. These helpers are the
+single definition of those two metrics, shared by the benchmark and the
+tests so the gate can never drift from what the suite verifies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# Contract measurement orders score *values* outside the serving path;
+# canonical (score desc, id asc) tie-breaking is irrelevant to a mean.
+# xmrlint: tolerance-tier
+def topk_scores(scores: jax.Array, k: int) -> jax.Array:
+    """Descending top-``k`` score values per row (order-only, no ids).
+
+    Not a serving-path selection: quantized and exact tiers may rank
+    near-tied labels differently, so the contract compares the score
+    *multisets*, which this makes positional.
+    """
+    vals, _ = jax.lax.top_k(jnp.asarray(scores, jnp.float32), k)
+    return vals
+
+
+def recall_at_k(ref_labels: np.ndarray, got_labels: np.ndarray) -> float:
+    """Mean per-query overlap |ref ∩ got| / k between two top-k label sets.
+
+    ``ref_labels`` is the exact tier's [n, k] panel, ``got`` the compressed
+    tier's [n, k']; recall is measured at the reference width k.
+    """
+    ref = np.asarray(ref_labels)
+    got = np.asarray(got_labels)
+    n, k = ref.shape
+    hits = 0
+    for i in range(n):
+        hits += np.intersect1d(ref[i], got[i]).size
+    return hits / float(n * k)
+
+
+def score_mae(ref_scores: np.ndarray, got_scores: np.ndarray,
+              k: int | None = None) -> float:
+    """Mean |Δ| between the two tiers' descending top-k score values."""
+    ref = np.asarray(ref_scores)
+    got = np.asarray(got_scores)
+    k = min(ref.shape[1], got.shape[1]) if k is None else k
+    a = np.asarray(topk_scores(ref, k))
+    b = np.asarray(topk_scores(got, k))
+    return float(np.mean(np.abs(a - b)))

@@ -32,6 +32,7 @@ from repro.serving.config import (
     AdmissionConfig,
     FleetConfig,
     PartitionConfig,
+    QuantConfig,
     ServeConfig,
 )
 from repro.serving.engine import XMRServingEngine, resolve_method
@@ -43,6 +44,7 @@ __all__ = [
     "AdmissionConfig",
     "FleetConfig",
     "PartitionConfig",
+    "QuantConfig",
     "ServeConfig",
     # engine + front end
     "BatchPolicy",

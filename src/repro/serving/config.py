@@ -9,7 +9,11 @@ groups them by who consumes them:
 * :class:`AdmissionConfig` — the overload policy the :class:`~repro.serving
   .batcher.MicroBatcher` applies at the queue boundary;
 * :class:`PartitionConfig` — the label-partitioned dispatch topology
-  (:mod:`repro.index`).
+  (:mod:`repro.index`);
+* :class:`FleetConfig` — cross-process fleet resilience knobs;
+* :class:`QuantConfig` — the compressed-weight storage tier
+  (:mod:`repro.quant`): ``tier="exact"`` serves the f32 tree unchanged,
+  the other tiers quantize the (partitioned) weights at engine build.
 
 Back compat: the pre-v1 flat kwargs (``queue_depth=``, ``partitions=``, …)
 still work — ``ServeConfig`` routes them into the right nested group and
@@ -94,6 +98,46 @@ class FleetConfig:
             )
 
 
+#: Valid :attr:`QuantConfig.tier` values. ``"fp8"`` needs a jax build with
+#: ``float8_e4m3fn``; availability is checked when the tree is quantized
+#: (:func:`repro.quant.quantize_tree`), not here — config stays import-light.
+QUANT_TIERS = ("exact", "int8", "int8_pruned", "fp8")
+
+
+@dataclasses.dataclass
+class QuantConfig:
+    """Compressed-weight storage tier (:mod:`repro.quant`).
+
+    ``tier``:
+
+    * ``"exact"`` (default) — f32 weights, bitwise-identical serving; the
+      engine behaves exactly as before this config existed.
+    * ``"int8"`` — per-(chunk, column) symmetric int8 weights + f32 scales,
+      served through ``method="mscm_pallas_grouped_q"`` (dequantize
+      in-register). ~4× smaller partitions; accuracy is a *measured
+      contract* (recall@k floor / score-MAE bound, ``benchmarks/
+      bench_quant.py``), not a bitwise claim.
+    * ``"int8_pruned"`` — int8 plus a magnitude-pruned ELL re-pack keeping
+      the top ``prune_keep`` fraction of each chunk's rows (pad width R
+      shrinks too).
+    * ``"fp8"`` — fp8-e4m3 storage where the backend has the dtype
+      (in-process serving only; the fleet wire is int8/f32).
+    """
+
+    tier: str = "exact"
+    prune_keep: float = 0.5  # row fraction kept by the pruned re-pack
+
+    def __post_init__(self) -> None:
+        if self.tier not in QUANT_TIERS:
+            raise ValueError(
+                f"tier={self.tier!r}; choose from {QUANT_TIERS}"
+            )
+        if not 0.0 < self.prune_keep <= 1.0:
+            raise ValueError(
+                f"prune_keep must be in (0, 1]; got {self.prune_keep}"
+            )
+
+
 _ADMISSION_FIELDS = frozenset(
     f.name for f in dataclasses.fields(AdmissionConfig)
 )
@@ -102,6 +146,9 @@ _PARTITION_FIELDS = frozenset(
 )
 _FLEET_FIELDS = frozenset(
     f.name for f in dataclasses.fields(FleetConfig)
+)
+_QUANT_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(QuantConfig)
 )
 
 
@@ -124,6 +171,7 @@ class ServeConfig:
         default_factory=PartitionConfig
     )
     fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
+    quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
 
     def __init__(
         self,
@@ -138,6 +186,7 @@ class ServeConfig:
         admission: AdmissionConfig | None = None,
         partition: PartitionConfig | None = None,
         fleet: FleetConfig | None = None,
+        quant: QuantConfig | None = None,
         **flat: Any,
     ) -> None:
         self.beam = beam
@@ -151,11 +200,13 @@ class ServeConfig:
         self.admission = admission if admission is not None else AdmissionConfig()
         self.partition = partition if partition is not None else PartitionConfig()
         self.fleet = fleet if fleet is not None else FleetConfig()
+        self.quant = quant if quant is not None else QuantConfig()
         if flat:
             adm = {k: v for k, v in flat.items() if k in _ADMISSION_FIELDS}
             prt = {k: v for k, v in flat.items() if k in _PARTITION_FIELDS}
             flt = {k: v for k, v in flat.items() if k in _FLEET_FIELDS}
-            unknown = set(flat) - set(adm) - set(prt) - set(flt)
+            qnt = {k: v for k, v in flat.items() if k in _QUANT_FIELDS}
+            unknown = set(flat) - set(adm) - set(prt) - set(flt) - set(qnt)
             if unknown:
                 raise TypeError(
                     f"ServeConfig got unexpected keyword argument(s) "
@@ -163,10 +214,10 @@ class ServeConfig:
                 )
             warnings.warn(
                 f"flat ServeConfig kwarg(s) "
-                f"{sorted(adm) + sorted(prt) + sorted(flt)} are "
-                "deprecated; pass admission=AdmissionConfig(...) / "
-                "partition=PartitionConfig(...) / fleet=FleetConfig(...) "
-                "instead",
+                f"{sorted(adm) + sorted(prt) + sorted(flt) + sorted(qnt)} "
+                "are deprecated; pass admission=AdmissionConfig(...) / "
+                "partition=PartitionConfig(...) / fleet=FleetConfig(...) / "
+                "quant=QuantConfig(...) instead",
                 DeprecationWarning,
                 stacklevel=2,
             )
@@ -177,6 +228,8 @@ class ServeConfig:
                 self.partition = dataclasses.replace(self.partition, **prt)
             if flt:
                 self.fleet = dataclasses.replace(self.fleet, **flt)
+            if qnt:
+                self.quant = dataclasses.replace(self.quant, **qnt)
 
     # -- flat read-side forwarding (pre-v1 call sites) ----------------------
     @property
@@ -210,3 +263,11 @@ class ServeConfig:
     @property
     def degraded_policy(self) -> str:
         return self.fleet.degraded_policy
+
+    @property
+    def tier(self) -> str:
+        return self.quant.tier
+
+    @property
+    def prune_keep(self) -> float:
+        return self.quant.prune_keep

@@ -47,13 +47,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tree import XMRTree
-from repro.serving.config import AdmissionConfig, PartitionConfig, ServeConfig
+from repro.serving.config import (
+    AdmissionConfig,
+    PartitionConfig,
+    QuantConfig,
+    ServeConfig,
+)
 from repro.serving.metrics import LatencyStats
 from repro.sparse.csr import CSR, rows_to_ell
 
 __all__ = [
     "AdmissionConfig",
     "PartitionConfig",
+    "QuantConfig",
     "ServeConfig",
     "XMRServingEngine",
     "resolve_method",
@@ -89,6 +95,19 @@ class XMRServingEngine:
                  label_perm: Optional[np.ndarray] = None):
         self.config = config or ServeConfig()
         self.method = resolve_method(self.config.method)
+        qc = self.config.quant
+        if qc.tier != "exact":
+            # Compressed tiers store int8/fp8 chunk tiles + scale rows; the
+            # quantized grouped kernel is the only method that can read
+            # them. "auto" resolves there; an explicit exact method is a
+            # config contradiction, not something to silently override.
+            if self.config.method not in ("auto", "mscm_pallas_grouped_q"):
+                raise ValueError(
+                    f"quant tier {qc.tier!r} serves via "
+                    f"method='mscm_pallas_grouped_q'; got explicit "
+                    f"method={self.config.method!r}"
+                )
+            self.method = "mscm_pallas_grouped_q"
         self.label_perm = label_perm  # leaf position -> original label id
         self.stats = LatencyStats()
         self.mesh = None
@@ -105,6 +124,15 @@ class XMRServingEngine:
             raise ValueError(
                 f"shards={shards} exceeds max_batch={self.config.max_batch}"
             )
+        if qc.tier != "exact" and self.config.partition.partitions == 1:
+            # Unpartitioned compressed serving: quantize the whole tree (the
+            # QuantizedTree rides the same device_put/infer machinery, so
+            # the shards>1 replication below works unchanged).
+            from repro.quant import quantize_tree
+
+            tree = quantize_tree(
+                tree, tier=qc.tier, prune_keep=qc.prune_keep
+            )
         if self.config.partition.partitions > 1:
             # Label-partitioned dispatch: the tree is cut into P sub-trees
             # placed over a ("data", "model") mesh; every _run goes through
@@ -116,6 +144,16 @@ class XMRServingEngine:
             self.index = partition_tree(
                 tree, pc.partitions, level=pc.partition_level
             )
+            if qc.tier != "exact":
+                # Quantize per partition *after* the cut: the router head
+                # stays exact f32 (its beam feeds every partition) and the
+                # manifest's memory_bytes/content_hash describe the
+                # compressed bytes placement actually balances.
+                from repro.quant import quantize_index
+
+                self.index = quantize_index(
+                    self.index, tier=qc.tier, prune_keep=qc.prune_keep
+                )
             self.placement = place(self.index, shards=shards)
             self.planner = ScatterGatherPlanner(
                 self.index,

@@ -195,6 +195,7 @@ def partition_payload(
     """
     part = index.parts[pid]
     info = index.manifest.partitions[pid]
+    tier = getattr(part, "tier", "exact")
     header = {
         "pid": info.pid,
         "level": index.level,
@@ -205,12 +206,31 @@ def partition_payload(
         "beam": beam, "topk": topk, "method": method,
         "score_mode": score_mode, "qt": qt,
         "part_n_cols": list(part.n_cols),
+        "tier": tier,
     }
-    arrays = [
-        np.asarray(t)
-        for lay in part.layers
-        for t in (lay.chunk_rows, lay.chunk_vals, lay.col_rows, lay.col_vals)
-    ]
+    if tier != "exact":
+        # Quantized partitions ship three tensors per layer: the exact ELL
+        # mask, the int8 weights, and the f32 scale rows. The RPC frame
+        # format round-trips dtypes via numpy dtype strings, which excludes
+        # the ml_dtypes fp8 family — fp8 is an in-process tier only.
+        arrays = []
+        for lay in part.layers:
+            q = np.asarray(lay.chunk_vals)
+            if q.dtype != np.int8:
+                raise ValueError(
+                    f"fleet wire carries int8 quantized weights only; "
+                    f"partition {pid} stores {q.dtype} (tier={tier!r}) — "
+                    "serve fp8 in-process"
+                )
+            arrays += [np.asarray(lay.chunk_rows), q,
+                       np.asarray(lay.chunk_scales)]
+    else:
+        arrays = [
+            np.asarray(t)
+            for lay in part.layers
+            for t in (lay.chunk_rows, lay.chunk_vals, lay.col_rows,
+                      lay.col_vals)
+        ]
     return header, arrays
 
 

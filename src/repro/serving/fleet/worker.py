@@ -48,7 +48,8 @@ import numpy as np
 from repro.serving.fleet.rpc import recv_frame, send_frame
 
 _NEEDS_DENSE = (
-    "mscm_dense", "mscm_pallas", "mscm_pallas_pregather", "mscm_pallas_grouped",
+    "mscm_dense", "mscm_pallas", "mscm_pallas_pregather",
+    "mscm_pallas_grouped", "mscm_pallas_grouped_q",
 )
 
 
@@ -74,23 +75,48 @@ class PartitionRunner:
         self.method = str(header["method"])
         self.score_mode = str(header["score_mode"])
         self.qt = int(header["qt"])
+        self.tier = str(header.get("tier", "exact"))
         d = int(header["d"])
-        n_layers = len(arrays) // 4
-        layers = [
-            TreeLayerArrays(
-                chunk_rows=jnp.asarray(arrays[4 * i]),
-                chunk_vals=jnp.asarray(arrays[4 * i + 1]),
-                col_rows=jnp.asarray(arrays[4 * i + 2]),
-                col_vals=jnp.asarray(arrays[4 * i + 3]),
+        if self.tier != "exact":
+            # Quantized payload: three tensors per layer (exact mask, int8
+            # weights, f32 scale rows) — see ``partition_payload``. The
+            # local sub-tree is a QuantizedTree; the shared jitted programs
+            # dispatch on the quantized method string.
+            from repro.quant import QuantLayerArrays, QuantizedTree
+
+            n_layers = len(arrays) // 3
+            qlayers = [
+                QuantLayerArrays(
+                    chunk_rows=jnp.asarray(arrays[3 * i]),
+                    chunk_vals=jnp.asarray(arrays[3 * i + 1]),
+                    chunk_scales=jnp.asarray(arrays[3 * i + 2]),
+                )
+                for i in range(n_layers)
+            ]
+            self.part = QuantizedTree(
+                layers=qlayers,
+                n_cols=tuple(header["part_n_cols"]),
+                branching=self.branching[self.level:],
+                d=d,
+                tier=self.tier,
             )
-            for i in range(n_layers)
-        ]
-        self.part = XMRTree(
-            layers=layers,
-            n_cols=tuple(header["part_n_cols"]),
-            branching=self.branching[self.level:],
-            d=d,
-        )
+        else:
+            n_layers = len(arrays) // 4
+            layers = [
+                TreeLayerArrays(
+                    chunk_rows=jnp.asarray(arrays[4 * i]),
+                    chunk_vals=jnp.asarray(arrays[4 * i + 1]),
+                    col_rows=jnp.asarray(arrays[4 * i + 2]),
+                    col_vals=jnp.asarray(arrays[4 * i + 3]),
+                )
+                for i in range(n_layers)
+            ]
+            self.part = XMRTree(
+                layers=layers,
+                n_cols=tuple(header["part_n_cols"]),
+                branching=self.branching[self.level:],
+                d=d,
+            )
         # per-batch state
         self._xi = self._xv = self._xd = None
         self._spec_ids = self._spec_comb = None

@@ -1,0 +1,19 @@
+"""XMR005 positive fixture: ``repro/quant`` is inside the checked scope and
+the ``tolerance-tier`` pragma is function-scoped — a stray or detached
+pragma comment must not waive the check."""
+
+import jax
+
+# xmrlint: tolerance-tier
+# (a floating pragma comment far from any def must not waive anything)
+
+
+def unmarked_select(scores, k):
+    return jax.lax.top_k(scores, k)   # VIOLATION: quant scope, no pragma
+
+
+# xmrlint: tolerance-tier
+# pragma is two lines above the def — not attached to it
+
+def detached_pragma(scores, k):
+    return jax.lax.top_k(scores, k)   # VIOLATION: pragma not adjacent

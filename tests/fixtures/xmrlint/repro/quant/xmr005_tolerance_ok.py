@@ -1,0 +1,23 @@
+"""XMR005 negative fixture: ``tolerance-tier``-pragma'd measurement code.
+
+Tier-comparison metrics (recall/MAE across quantized tiers) select top-k
+scores only to *measure* drift — bitwise tie-break identity is not the
+claim — so the function pragma waives the ad-hoc-selection check. Both
+accepted placements: the line directly above the ``def``, or the ``def``
+line itself.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# xmrlint: tolerance-tier
+def topk_scores(scores, k):
+    vals, _ = jax.lax.top_k(jnp.asarray(scores), k)
+    return vals
+
+
+def score_mae(ref, got, k):  # xmrlint: tolerance-tier
+    return jnp.abs(
+        jax.lax.top_k(ref, k)[0] - jax.lax.top_k(got, k)[0]
+    ).mean()

@@ -34,9 +34,15 @@ def test_full_beam_equals_brute_force(small_tree):
     np.testing.assert_allclose(np.asarray(s), ref_s, rtol=1e-5, atol=1e-6)
 
 
-@pytest.mark.parametrize("method", METHODS)
+# The quantized tier's method (suffix ``_q``) is the documented exception
+# to the exact-parity claim: it needs a QuantizedTree and its contract
+# (bitwise vs the exact grouped kernel on dequantized weights) lives in
+# tests/test_quant.py.
+@pytest.mark.parametrize(
+    "method", [m for m in METHODS if not m.endswith("_q")]
+)
 def test_methods_identical(small_tree, method):
-    """The paper's 'free of charge' claim: every method, same results."""
+    """The paper's 'free of charge' claim: every exact method, same results."""
     tree, ws, x, xi, xv = small_tree
     s0, l0 = tree.infer(xi, xv, beam=10, topk=5, method="vanilla")
     s, l = tree.infer(xi, xv, beam=10, topk=5, method=method)

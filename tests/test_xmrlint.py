@@ -111,6 +111,22 @@ def test_xmr005_parity_discipline_negative():
     assert lint("repro/core/xmr005_ok.py") == []
 
 
+def test_xmr005_tolerance_tier_pragma_exempts_measurement_code():
+    # Quantized-tier metric helpers (recall/MAE across tiers) measure score
+    # drift; the function pragma waives the ad-hoc-selection check for them
+    # in both accepted placements (line above the def, the def line itself).
+    assert lint("repro/quant/xmr005_tolerance_ok.py") == []
+
+
+def test_xmr005_tolerance_tier_pragma_is_function_scoped():
+    # repro/quant is inside the checked scope, and a floating or detached
+    # pragma comment must not waive anything — only the def line or the
+    # line directly above it attach.
+    found = lint("repro/quant/xmr005_tolerance_bad.py")
+    assert rules_of(found) == {"XMR005"}
+    assert len(found) == 2  # unmarked select + detached pragma
+
+
 # -- suppressions -------------------------------------------------------------
 
 def _ctx(tmp_path, source, name="mod.py"):

@@ -16,9 +16,18 @@ lives in exactly three helpers: ``beam_select`` (the two-key sort),
 ``_local_select`` (the id-presorted ``top_k`` whose lowest-index tie-break
 *is* the canonical order), and ``topk_canonical``/``merge_topk`` (the merge
 primitive). A raw ``lax.top_k`` or ``lax.sort`` selection anywhere else in
-the serving stack (``repro/core``, ``repro/index``, ``repro/serving``) can
-disagree with them on ties — exactly the class of drift the partition/fleet
-parity tests exist to catch, caught here before it compiles.
+the serving stack (``repro/core``, ``repro/index``, ``repro/serving``,
+``repro/quant``) can disagree with them on ties — exactly the class of
+drift the partition/fleet parity tests exist to catch, caught here before
+it compiles.
+
+One narrow escape hatch: a ``# xmrlint: tolerance-tier`` pragma on the
+``def`` line (or the line directly above) marks a function as *measurement*
+code for the quantized tier's tolerance contract — it compares scores
+across tiers, where bitwise tie-break identity is not the claim being made
+— and exempts it from the ad-hoc-selection check. The pragma is
+function-scoped on purpose: a module-wide waiver would silently cover
+serving-path code added later to the same file.
 """
 
 from __future__ import annotations
@@ -40,7 +49,12 @@ _SENTINELS = {"NEG_INF"}
 #: selection helpers whose tie-break semantics the parity tests pin.
 _CANONICAL_FNS = {"beam_select", "_local_select", "merge_topk", "topk_canonical"}
 _SELECT_CALLS = {"top_k", "sort"}
-_STACK_SCOPES = ("repro/core/", "repro/index/", "repro/serving/")
+_STACK_SCOPES = (
+    "repro/core/", "repro/index/", "repro/serving/", "repro/quant/",
+)
+#: Function pragma exempting tier-comparison *measurement* code from the
+#: ad-hoc-selection check (see module docstring). Function-scoped only.
+_TOLERANCE_PRAGMA = "tolerance-tier"
 
 
 def _is_sentinel(node: ast.AST) -> bool:
@@ -91,6 +105,8 @@ class ParityDisciplineRule(Rule):
                 continue  # jnp.sort on host-side prep etc. is out of scope
             fn = enclosing_function(node)
             if fn is not None and fn.name in _CANONICAL_FNS:
+                continue
+            if fn is not None and _TOLERANCE_PRAGMA in ctx.function_pragmas(fn):
                 continue
             yield self.violation(
                 ctx, node,
