@@ -67,6 +67,11 @@ STRUCT_FLAGS = (
     "degraded_parity",             # degraded responses survivor-exact
     "quant_kernel_parity",         # grouped_q == grouped on dequantized f32
     "quant_tier_parity",           # int8 tier bitwise across P x sync modes
+    "adaptive_full_beam_parity",   # every beam tier bitwise-exact, tier 0
+                                   # identical to a no-SLO engine, all
+                                   # serving topologies
+    "slo_p99_bounded",             # adaptive 4x-overload p99 within 5x of 1x
+    "recall_floor_met",            # frontier recall >= worst-tier floor
 )
 
 # Numeric tolerance claims in derived fields: ``name=value<=bound`` /

@@ -10,6 +10,7 @@ as ``BENCH_ci.json`` so the perf trajectory accumulates across commits).
   Figure 5               -> bench_napkin     (per-column ref vs MSCM)
   Figure 6 / §6.1        -> bench_parallel   (batch-amortization analogue)
   §3.2 online            -> bench_serving    (micro-batched vs per-query)
+  SLO frontier           -> bench_slo        (adaptive beam tiers, p99/recall)
   beyond-paper           -> bench_xmr_head   (MSCM vocab-tree LM head)
   §Roofline              -> roofline         (dry-run derived, no timing)
 """
@@ -53,7 +54,8 @@ def main() -> int:
 
     from benchmarks import (bench_enterprise, bench_gateway, bench_mscm,
                             bench_napkin, bench_parallel, bench_partitioned,
-                            bench_quant, bench_serving, bench_xmr_head)
+                            bench_quant, bench_serving, bench_slo,
+                            bench_xmr_head)
 
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -116,6 +118,12 @@ def main() -> int:
     # flag (bitwise vs in-process) gates via check_regression.
     emit("gateway", bench_gateway.run,
          n_queries=32 if not args.full else 128)
+    # Latency-SLO adaptive inference (ISSUE 10): per-batch beam tiers that
+    # degrade instead of shed — tier parity across all serving topologies
+    # (adaptive_full_beam_parity) plus the p99-vs-recall frontier flags
+    # (slo_p99_bounded, recall_floor_met) gate via check_regression.
+    emit("slo", bench_slo.run,
+         n_queries=64 if not args.full else 192)
     # Quantized serving tiers (ISSUE 9): int8 / pruned-int8 chunk storage —
     # memory-shrink floor, recall floor and score-MAE bound ride along as
     # tolerance rows; kernel/tier parity flags gate via check_regression.

@@ -11,8 +11,17 @@ CI (bench-smoke) appends the output to ``$GITHUB_STEP_SUMMARY`` right after
 the trend check. Exit is always 0 for an empty or missing file: the first
 run on a branch has no trajectory yet, and a report must never gate.
 
+``--annotate`` switches the output from markdown to GitHub workflow
+commands on stdout (so it must go to the job log, *not* the step-summary
+redirect): one ``::warning`` per row whose last/first drift exceeds
+``--drift-threshold`` (default 1.5x), upgraded to ``::error`` when the
+drift also held in the previous run — two consecutive drifted rows is a
+trend, not timer noise. ``::error`` alone still exits 0 (annotations on a
+PR inform, the trend gate in check_regression decides); add ``--strict``
+(nightly) to exit 1 on any persistent drift.
+
 Run: ``python -m benchmarks.trajectory_report BENCH_trajectory.jsonl
-[--limit 20] [--top 40]``
+[--limit 20] [--top 40] [--annotate [--strict]]``
 """
 
 from __future__ import annotations
@@ -96,6 +105,73 @@ def render(runs: List[dict], *, top: int = 40) -> str:
     return "\n".join(lines)
 
 
+def _escape_cmd(text: str) -> str:
+    """Escape a message for a GitHub ``::workflow-command::`` data field."""
+    return (text.replace("%", "%25")
+                .replace("\r", "%0D")
+                .replace("\n", "%0A"))
+
+
+def drift_findings(runs: List[dict],
+                   threshold: float = 1.5) -> List[dict]:
+    """Rows in the latest run whose last/first drift exceeds ``threshold``.
+
+    Each finding: ``{"name", "ratio", "first", "last", "runs",
+    "persistent"}``. ``persistent`` means the previous run's value was
+    *also* past the threshold vs the window start — two consecutive
+    drifted rows is a sustained regression, one is quite possibly a noisy
+    timer on a shared CI box.
+    """
+    if len(runs) < 2:
+        return []
+    series: Dict[str, List[float]] = {}
+    for run in runs:
+        for name, us in run["rows"].items():
+            series.setdefault(name, []).append(float(us))
+    findings = []
+    for name in sorted(runs[-1]["rows"]):
+        s = series[name]
+        if len(s) < 2 or s[0] <= 0:
+            continue
+        ratio = s[-1] / s[0]
+        if ratio <= threshold:
+            continue
+        findings.append({
+            "name": name,
+            "ratio": ratio,
+            "first": s[0],
+            "last": s[-1],
+            "runs": len(s),
+            "persistent": len(s) >= 3 and s[-2] / s[0] > threshold,
+        })
+    findings.sort(key=lambda f: f["ratio"], reverse=True)
+    return findings
+
+
+def annotate(runs: List[dict], *, threshold: float = 1.5,
+             strict: bool = False) -> int:
+    """Print GitHub workflow-command annotations for drifted rows.
+
+    Returns the exit code: nonzero only when ``strict`` and at least one
+    drift is persistent (held for two consecutive runs).
+    """
+    findings = drift_findings(runs, threshold)
+    persistent = 0
+    for f in findings:
+        level = "error" if f["persistent"] else "warning"
+        persistent += f["persistent"]
+        span = ("held for 2+ consecutive runs" if f["persistent"]
+                else "latest run only")
+        msg = (f"{f['name']} drifted {f['ratio']:.2f}x over "
+               f"{f['runs']} runs ({_fmt_us(f['first'])}us -> "
+               f"{_fmt_us(f['last'])}us, {span})")
+        print(f"::{level} title=Perf trajectory drift::{_escape_cmd(msg)}")
+    if not findings:
+        print(f"# trajectory: no row drifted past {threshold:g}x "
+              f"over {len(runs)} run(s)")
+    return 1 if (strict and persistent) else 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("trajectory", help="rolling BENCH_trajectory.jsonl")
@@ -103,10 +179,22 @@ def main(argv=None) -> int:
                     help="use only the newest N runs (0 = all)")
     ap.add_argument("--top", type=int, default=40,
                     help="report at most N benchmark rows, worst drift first")
+    ap.add_argument("--annotate", action="store_true",
+                    help="emit ::warning/::error workflow commands instead "
+                         "of the markdown report (send to the job log, not "
+                         "the step summary)")
+    ap.add_argument("--drift-threshold", type=float, default=1.5,
+                    help="last/first ratio above which a row is annotated")
+    ap.add_argument("--strict", action="store_true",
+                    help="with --annotate: exit 1 when a drift persisted "
+                         "for two consecutive runs (nightly gate)")
     args = ap.parse_args(argv)
     runs = load_rows(args.trajectory)
     if args.limit > 0:
         runs = runs[-args.limit:]
+    if args.annotate:
+        return annotate(runs, threshold=args.drift_threshold,
+                        strict=args.strict)
     sys.stdout.write(render(runs, top=args.top))
     return 0
 

@@ -340,7 +340,14 @@ class BeamTransport:
         x_val: np.ndarray,
         parent_ids: np.ndarray,
         scores: np.ndarray,
+        *,
+        beam: Optional[int] = None,
+        qt: Optional[int] = None,
     ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """``beam``/``qt`` override the partitions' configured settings for
+        this batch only (adaptive beam tiers; ``None`` = the configured
+        full values — the coordinator omits them unless degraded, so tier-0
+        traffic is byte-identical to a transport without tiers)."""
         raise NotImplementedError
 
     def step(
@@ -476,7 +483,8 @@ class ScatterGatherPlanner:
                 )
         self.transport = transport
 
-    def _infer_transport(self, x_idx, x_val, parent_ids, scores):
+    def _infer_transport(self, x_idx, x_val, parent_ids, scores, *,
+                         beam: int, qt: int):
         """Coordinator half of the pipelined exchange over a transport.
 
         If the transport loses a partition mid-exchange and its policy
@@ -494,7 +502,7 @@ class ScatterGatherPlanner:
         while True:
             try:
                 w_scores, w_ids = self._transport_exchange(
-                    x_idx, x_val, parent_ids, scores
+                    x_idx, x_val, parent_ids, scores, beam=beam, qt=qt
                 )
                 break
             except TransportDegraded:
@@ -511,7 +519,8 @@ class ScatterGatherPlanner:
             }
         return w_scores, w_ids
 
-    def _transport_exchange(self, x_idx, x_val, parent_ids, scores):
+    def _transport_exchange(self, x_idx, x_val, parent_ids, scores, *,
+                            beam: int, qt: int):
         """One full begin/step/merge pass over the transport.
 
         Same width/level recurrence as :meth:`_infer_pipelined`; the
@@ -522,14 +531,23 @@ class ScatterGatherPlanner:
         idx = self.index
         depth = len(idx.n_cols)
         width = parent_ids.shape[1]  # router handoff beam width
+        # Tier overrides ride the begin header only when they actually
+        # differ from the workers' loaded settings — full-beam batches stay
+        # byte-identical on the wire to a fleet that predates tiers.
+        overrides = {}
+        if beam != self.beam:
+            overrides["beam"] = beam
+        if qt != self.qt:
+            overrides["qt"] = qt
         beams = self.transport.begin(
             np.asarray(x_idx), np.asarray(x_val),
             np.asarray(parent_ids), np.asarray(scores),
+            **overrides,
         )
         w_ids = w_scores = None
         for li in range(idx.level, depth):
             is_last = li == depth - 1
-            next_b = min(self.topk if is_last else self.beam, idx.n_cols[li])
+            next_b = min(self.topk if is_last else beam, idx.n_cols[li])
             width = min(next_b, width * idx.branching[li])
             if li > idx.level:
                 beams = self.transport.step(li, np.asarray(w_ids))
@@ -554,12 +572,13 @@ class ScatterGatherPlanner:
         return tuple(jax.device_put(a, dev) for a in arrays)
 
     # -- query path ---------------------------------------------------------
-    def _route(self, x_idx: jax.Array, x_val: jax.Array):
+    def _route(self, x_idx: jax.Array, x_val: jax.Array, *,
+               beam: int, qt: int):
         """Router head: the global beam after the levels above the split."""
         return self.index.head.infer(
-            x_idx, x_val, beam=self.beam, topk=self.beam,
+            x_idx, x_val, beam=beam, topk=beam,
             method=self._router_method, score_mode=self.score_mode,
-            qt=self.qt,
+            qt=qt,
         )
 
     def _active_partitions(self, parent_ids: jax.Array) -> List[int]:
@@ -600,23 +619,39 @@ class ScatterGatherPlanner:
         return out
 
     def infer(
-        self, x_idx: jax.Array, x_val: jax.Array
+        self, x_idx: jax.Array, x_val: jax.Array, *,
+        beam: Optional[int] = None, qt: Optional[int] = None,
     ) -> Tuple[jax.Array, jax.Array]:
-        """Global (scores [n, k], labels [n, k]) for a query batch."""
+        """Global (scores [n, k], labels [n, k]) for a query batch.
+
+        ``beam``/``qt`` override the configured settings for this call only
+        (the adaptive tier path — the coordinator picks a tier per batch);
+        ``None`` keeps the constructor values, and that default path is
+        unchanged down to the wire. Every sync mode clamps widths from the
+        effective beam, so partition-local selects stay bitwise-exact *at
+        that tier*.
+        """
+        beam = self.beam if beam is None else int(beam)
+        qt = self.qt if qt is None else int(qt)
         self.last_degraded = None
-        scores, parent_ids = self._route(x_idx, x_val)
+        scores, parent_ids = self._route(x_idx, x_val, beam=beam, qt=qt)
         if self.transport is not None:
-            return self._infer_transport(x_idx, x_val, parent_ids, scores)
+            return self._infer_transport(
+                x_idx, x_val, parent_ids, scores, beam=beam, qt=qt
+            )
         if self.sync == "final":
-            return self._infer_final(x_idx, x_val, parent_ids, scores)
+            return self._infer_final(
+                x_idx, x_val, parent_ids, scores, beam=beam, qt=qt
+            )
         active = self._active_partitions(parent_ids)
         run = (
             self._infer_pipelined if self.sync == "pipelined"
             else self._infer_level
         )
-        return run(x_idx, x_val, parent_ids, scores, active)
+        return run(x_idx, x_val, parent_ids, scores, active, beam=beam, qt=qt)
 
-    def _level_owned(self, li, pid, inputs, parent_ids, scores, span):
+    def _level_owned(self, li, pid, inputs, parent_ids, scores, span,
+                     qt: Optional[int] = None):
         """One partition's owned candidate slice of level ``li`` (jitted)."""
         idx = self.index
         part, info = self.parts[pid], idx.manifest.partitions[pid]
@@ -627,17 +662,19 @@ class ScatterGatherPlanner:
             lay, idx.branching[li], idx.d, xi_p, xv_p, xd_p,
             parent_ids, scores,
             jnp.int32(info.chunk_start * span), jnp.int32(c_real),
-            method=self.method, score_mode=self.score_mode, qt=self.qt,
+            method=self.method, score_mode=self.score_mode,
+            qt=self.qt if qt is None else qt,
         )
 
-    def _infer_level(self, x_idx, x_val, parent_ids, scores, active):
+    def _infer_level(self, x_idx, x_val, parent_ids, scores, active, *,
+                     beam: int, qt: int):
         idx = self.index
         inputs = self._partition_inputs(x_idx, x_val, active)
         depth = len(idx.n_cols)
         for li in range(idx.level, depth):
             is_last = li == depth - 1
             next_b = min(
-                self.topk if is_last else self.beam, idx.n_cols[li]
+                self.topk if is_last else beam, idx.n_cols[li]
             )
             combined, owned = [], []
             # Chunk ranges at this level: the split ranges scaled by the
@@ -647,7 +684,7 @@ class ScatterGatherPlanner:
             for pid in active:
                 ids_p, sc_p = self._to_partition(pid, parent_ids, scores)
                 comb_p, own_p = self._level_owned(
-                    li, pid, inputs, ids_p, sc_p, span
+                    li, pid, inputs, ids_p, sc_p, span, qt=qt
                 )
                 comb_p, own_p = self._to_coordinator(comb_p, own_p)
                 combined.append(comb_p)
@@ -658,7 +695,8 @@ class ScatterGatherPlanner:
             )
         return scores, parent_ids
 
-    def _infer_pipelined(self, x_idx, x_val, parent_ids, scores, active):
+    def _infer_pipelined(self, x_idx, x_val, parent_ids, scores, active, *,
+                         beam: int, qt: int):
         """Double-buffered exchange: level-l select ∥ level-(l+1) matmul.
 
         Each iteration, per partition and in device-stream order:
@@ -701,13 +739,15 @@ class ScatterGatherPlanner:
         span = span_next = 1
         for li in range(li0, depth):
             is_last = li == depth - 1
-            next_b = min(self.topk if is_last else self.beam, idx.n_cols[li])
+            next_b = min(self.topk if is_last else beam, idx.n_cols[li])
             width = min(next_b, width * idx.branching[li])
             # (1) local canonical beams for level li.
             if li == li0:
                 for pid in active:  # scored from the router handoff
                     ids, sc = self._to_partition(pid, parent_ids, scores)
-                    comb, own = self._level_owned(li0, pid, inputs, ids, sc, 1)
+                    comb, own = self._level_owned(
+                        li0, pid, inputs, ids, sc, 1, qt=qt
+                    )
                     beam_p[pid] = _spec_select(
                         ids, comb, own,
                         n_cols=idx.n_cols[li], n_chunks=idx.n_cols[li - 1],
@@ -745,13 +785,14 @@ class ScatterGatherPlanner:
                 for pid in active:
                     s_ids, s_sc = beam_p[pid]
                     spec_comb[pid], _ = self._level_owned(
-                        li + 1, pid, inputs, s_ids, s_sc, span_next
+                        li + 1, pid, inputs, s_ids, s_sc, span_next, qt=qt
                     )
                     spec_ids[pid] = s_ids
             span = span_next
         return w_scores, w_ids
 
-    def _run_partition(self, part, info, ids_p, sc_p, xi_p, xv_p):
+    def _run_partition(self, part, info, ids_p, sc_p, xi_p, xv_p,
+                       beam: Optional[int] = None, qt: Optional[int] = None):
         """One partition's whole-sub-tree traversal from the router beam.
 
         Localizes the global beam (out-of-range rows -> phantom chunk,
@@ -764,13 +805,16 @@ class ScatterGatherPlanner:
         local_ids = jnp.where(owned, ids_p - info.chunk_start, c_real)
         local_sc = jnp.where(owned, sc_p, NEG_INF)
         return part.infer(
-            xi_p, xv_p, beam=self.beam, topk=self.topk,
-            method=self.method, score_mode=self.score_mode, qt=self.qt,
+            xi_p, xv_p,
+            beam=self.beam if beam is None else beam, topk=self.topk,
+            method=self.method, score_mode=self.score_mode,
+            qt=self.qt if qt is None else qt,
             init_parent_ids=local_ids.astype(jnp.int32),
             init_scores=local_sc, clamp_chunks=True,
         )
 
-    def _infer_final(self, x_idx, x_val, parent_ids, scores):
+    def _infer_final(self, x_idx, x_val, parent_ids, scores, *,
+                     beam: int, qt: int):
         """Single-merge mode: whole sub-tree traversals, one canonical merge.
 
         Not bitwise-reproducible against the unpartitioned tree — each
@@ -782,7 +826,7 @@ class ScatterGatherPlanner:
             x_idx, x_val, range(idx.n_partitions)
         )
         width = reference_topk_width(
-            idx.n_cols, idx.branching, self.beam, self.topk
+            idx.n_cols, idx.branching, beam, self.topk
         )
         out_s, out_l = [], []
         for pid, (part, info) in enumerate(
@@ -790,7 +834,9 @@ class ScatterGatherPlanner:
         ):
             ids_p, sc_p = self._to_partition(pid, parent_ids, scores)
             xi_p, xv_p, _ = inputs[pid]
-            s, l = self._run_partition(part, info, ids_p, sc_p, xi_p, xv_p)
+            s, l = self._run_partition(
+                part, info, ids_p, sc_p, xi_p, xv_p, beam=beam, qt=qt
+            )
             # Globalize: real leaves get the partition's label offset; local
             # phantoms (id >= the partition's label count) are pushed past
             # every real global id so they can never tie-break into the merge.
@@ -826,7 +872,7 @@ class ScatterGatherPlanner:
         panel for benchmarks and capacity planning.
         """
         scores, parent_ids = jax.block_until_ready(
-            self._route(x_idx, x_val)
+            self._route(x_idx, x_val, beam=self.beam, qt=self.qt)
         )
         out = []
         for pid, (part, info) in enumerate(

@@ -34,10 +34,12 @@ from repro.serving.config import (
     PartitionConfig,
     QuantConfig,
     ServeConfig,
+    SLOConfig,
 )
 from repro.serving.engine import XMRServingEngine, resolve_method
 from repro.serving.gateway import ServingGateway
 from repro.serving.metrics import LatencyStats, ServerMetrics
+from repro.serving.slo import BeamTier, BeamTierPolicy, resolve_tiers
 
 __all__ = [
     # configuration
@@ -46,6 +48,11 @@ __all__ = [
     "PartitionConfig",
     "QuantConfig",
     "ServeConfig",
+    "SLOConfig",
+    # adaptive beam tiers
+    "BeamTier",
+    "BeamTierPolicy",
+    "resolve_tiers",
     # engine + front end
     "BatchPolicy",
     "MicroBatcher",

@@ -150,6 +150,13 @@ class QueryResult:
     ``missing_labels`` lists the unsearched ``[lo, hi)`` global label
     ranges. Degraded results keep ``status == "ok"`` / HTTP 200 — the
     request did not fail, the index was partially unavailable.
+
+    ``beam_tier`` is the adaptive-SLO analogue: tier 0 (the default, and
+    omitted from the wire) is the configured full beam — bitwise-identical
+    to a server without an SLO; tier > 0 means the batch was served at a
+    narrower beam to hold the latency target, so the ranking is exact *at
+    that beam* but may recall less than the full-beam ranking. Like
+    ``degraded``, it keeps ``status == "ok"``.
     """
 
     qid: int
@@ -163,6 +170,7 @@ class QueryResult:
     missing_labels: List[Tuple[int, int]] = dataclasses.field(
         default_factory=list
     )
+    beam_tier: int = 0
 
     @property
     def ok(self) -> bool:
@@ -207,6 +215,8 @@ class QueryResult:
                 doc["missing_labels"] = [
                     [int(lo), int(hi)] for lo, hi in self.missing_labels
                 ]
+            if self.beam_tier:
+                doc["beam_tier"] = int(self.beam_tier)
         else:
             doc["detail"] = self.detail
         return doc
@@ -229,6 +239,7 @@ class QueryResult:
                     (int(lo), int(hi))
                     for lo, hi in doc.get("missing_labels", [])
                 ],
+                beam_tier=int(doc.get("beam_tier", 0)),
             )
         except (KeyError, TypeError, ValueError) as exc:
             raise WireError(f"QueryResult: malformed document ({exc})") from exc

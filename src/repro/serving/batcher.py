@@ -44,6 +44,7 @@ from repro.serving.admission import AdmissionController, AdmissionPolicy
 from repro.serving.api import Query, QueryResult
 from repro.serving.engine import XMRServingEngine
 from repro.serving.metrics import ServerMetrics
+from repro.serving.slo import BeamTierPolicy
 from repro.sparse.csr import CSR
 
 TRIGGER_SIZE = "size"
@@ -163,6 +164,8 @@ class _InFlight:
     # attribute is per-dispatch mutable state, and double-buffering means
     # the *next* batch dispatches before this one finalizes.
     degraded: Optional[dict] = None
+    # Beam tier this batch was dispatched at (0 = full beam).
+    tier: int = 0
 
 
 def _device_ready(inflight: _InFlight) -> bool:
@@ -226,22 +229,56 @@ class MicroBatcher:
         self.queue = RequestQueue(self._controller)
         self.warmup_on_start = warmup_on_start
         self._thread: threading.Thread | None = None
+        #: Adaptive beam-tier selector; built + calibrated by ``start()``
+        #: when the engine has an SLO ladder, else None (always tier 0).
+        self.tier_policy: Optional[BeamTierPolicy] = None
+        # Serializes start()/stop(): stop() during start()'s warmup or
+        # auto-depth/tier probes must wait for the probe to finish (never
+        # close the queue under a half-measured bucket) and must observe
+        # the started thread to join it — not race past a None _thread.
+        self._lifecycle = threading.Lock()
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> "MicroBatcher":
-        if self._thread is not None:
-            raise RuntimeError("MicroBatcher already started")
-        if self.queue.closed:
-            raise RuntimeError("MicroBatcher cannot be restarted after stop()")
-        if self.warmup_on_start:
-            self.engine.warmup_buckets(self.engine.tree.d, self.policy.max_batch)
-        if self.admission.max_queue_depth == "auto":
-            self.admission.max_queue_depth = self._auto_queue_depth()
-        self._thread = threading.Thread(
-            target=self._worker, name="xmr-microbatcher", daemon=True
-        )
-        self._thread.start()
+        with self._lifecycle:
+            if self._thread is not None:
+                raise RuntimeError("MicroBatcher already started")
+            if self.queue.closed:
+                raise RuntimeError(
+                    "MicroBatcher cannot be restarted after stop()"
+                )
+            if self.warmup_on_start:
+                self.engine.warmup_buckets(
+                    self.engine.tree.d, self.policy.max_batch
+                )
+            if len(self.engine.tiers) > 1:
+                # Calibrate the tier ladder with the same drain-rate probe
+                # auto queue depth uses, one run per tier (which also warms
+                # each tier's jit bucket before live traffic can pick it).
+                self.tier_policy = BeamTierPolicy(
+                    self.engine.tiers,
+                    target_ms=float(self.engine.config.slo.target_p99_ms),
+                    bucket=self.engine.bucket_for(self.policy.max_batch),
+                ).calibrate(self._probe_cost_ms)
+            if self.admission.max_queue_depth == "auto":
+                self.admission.max_queue_depth = self._auto_queue_depth()
+            self._thread = threading.Thread(
+                target=self._worker, name="xmr-microbatcher", daemon=True
+            )
+            self._thread.start()
         return self
+
+    def _probe_cost_ms(self, tier: int = 0) -> float:
+        """Measured wall ms to serve one full coalescing bucket at ``tier``.
+
+        The shared drain-rate probe: ``queue_depth="auto"`` divides the
+        bucket by it for the admission bound, and the
+        :class:`~repro.serving.slo.BeamTierPolicy` runs it once per tier
+        for its cost model — one measurement path, two consumers.
+        """
+        return 1e3 * self.engine.measure_batch_seconds(
+            self.policy.max_batch, tier=tier
+        )
 
     def _auto_queue_depth(self) -> int:
         """Capacity-aware admission bound: measured drain rate x deadline.
@@ -254,7 +291,7 @@ class MicroBatcher:
         cannot meet the coalescing latency the policy encodes). Never below
         ``max_batch`` so a full bucket can always form.
         """
-        secs = self.engine.measure_batch_seconds(self.policy.max_batch)
+        secs = 1e-3 * self._probe_cost_ms()
         bucket = self.engine.bucket_for(self.policy.max_batch)
         drain_qps = bucket / max(secs, 1e-9)
         budget_ms = self.admission.deadline_ms
@@ -265,11 +302,18 @@ class MicroBatcher:
         )
 
     def stop(self) -> None:
-        """Stop accepting requests, drain the queue, join the worker."""
-        self.queue.close()
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Stop accepting requests, drain the queue, join the worker.
+
+        Safe to call concurrently with :meth:`start`: the lifecycle lock
+        makes stop wait for start's warmup/probe sequence to complete, so
+        the queue can never close under an in-flight probe and the freshly
+        started worker is always observed and joined.
+        """
+        with self._lifecycle:
+            self.queue.close()
+            if self._thread is not None:
+                self._thread.join()
+                self._thread = None
 
     def __enter__(self) -> "MicroBatcher":
         return self.start()
@@ -333,6 +377,7 @@ class MicroBatcher:
                         missing_labels=(
                             list(info["label_ranges"]) if info else []
                         ),
+                        beam_tier=getattr(f, "beam_tier", 0),
                     ))
 
             inner.add_done_callback(_wrap)
@@ -399,18 +444,40 @@ class MicroBatcher:
             yield done.get().result()
 
     # -- worker -------------------------------------------------------------
+    def _select_tier(self, reqs: List[_Request], t_dequeue: float) -> int:
+        """Beam tier for a batch formed now (0 without an SLO ladder).
+
+        The budget is the SLO target minus the oldest request's queue wait,
+        tightened by the earliest per-request deadline when any is set —
+        the batch must finish within whichever is sooner.
+        """
+        if self.tier_policy is None:
+            return 0
+        budget = self.tier_policy.target_ms - 1e3 * (
+            t_dequeue - min(r.t_enqueue for r in reqs)
+        )
+        deadlines = [r.t_deadline for r in reqs if r.t_deadline is not None]
+        if deadlines:
+            budget = min(budget, 1e3 * (min(deadlines) - t_dequeue))
+        return self.tier_policy.select(
+            queue_depth=len(self.queue), budget_ms=budget
+        )
+
     def _dispatch(self, reqs: List[_Request], trigger: str) -> _InFlight:
         t_dequeue = time.perf_counter()
+        tier = self._select_tier(reqs, t_dequeue)
         d = self.engine.tree.d
         sub = CSR.from_rows(
             [r.idx for r in reqs], [r.val for r in reqs], (len(reqs), d)
         )
         bucket = self.engine.bucket_for(len(reqs))
         xi, xv = self.engine.marshal_rows(sub, np.arange(len(reqs)), bucket)
-        s, l = self.engine._run(xi, xv)  # async dispatch — do not block here
+        # async dispatch — do not block here
+        s, l = self.engine._run(xi, xv, tier=tier)
         return _InFlight(
             reqs, s, l, t_dequeue, bucket, trigger,
             degraded=self.engine.last_degraded(),
+            tier=tier,
         )
 
     def _try_dispatch(
@@ -448,6 +515,8 @@ class MicroBatcher:
                 # Attribute channel to the v1 wrapper: set before
                 # set_result because done-callbacks fire synchronously.
                 req.future.degraded_info = inflight.degraded
+            if inflight.tier:
+                req.future.beam_tier = inflight.tier
             req.future.set_result((s[i], l[i]))
         if inflight.degraded is not None:
             self.metrics.record_degraded(len(inflight.reqs))
@@ -464,6 +533,7 @@ class MicroBatcher:
             partition_hits=hits,
             stall_ms=1e3 * (t_done - t_wait) if partitioned else None,
             cache_stats=self.engine.beam_cache_stats(),
+            tier=inflight.tier,
         )
 
     def _fail(self, reqs: List[_Request], exc: BaseException) -> None:

@@ -13,7 +13,11 @@ groups them by who consumes them:
 * :class:`FleetConfig` — cross-process fleet resilience knobs;
 * :class:`QuantConfig` — the compressed-weight storage tier
   (:mod:`repro.quant`): ``tier="exact"`` serves the f32 tree unchanged,
-  the other tiers quantize the (partitioned) weights at engine build.
+  the other tiers quantize the (partitioned) weights at engine build;
+* :class:`SLOConfig` — latency-SLO adaptive inference: a ladder of
+  degraded beam tiers the batcher may pick per dispatched batch when the
+  queue backs up (:mod:`repro.serving.slo`). Off by default
+  (``target_p99_ms=None``): every batch serves the full configured beam.
 
 Back compat: the pre-v1 flat kwargs (``queue_depth=``, ``partitions=``, …)
 still work — ``ServeConfig`` routes them into the right nested group and
@@ -33,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Any, Optional, Union
+from typing import Any, Optional, Tuple, Union
 
 
 @dataclasses.dataclass
@@ -138,6 +142,57 @@ class QuantConfig:
             )
 
 
+@dataclasses.dataclass
+class SLOConfig:
+    """Latency-SLO adaptive inference (:mod:`repro.serving.slo`).
+
+    ``target_p99_ms=None`` (default) disables adaptive tiering: the engine
+    exposes a single tier — the configured full ``(beam, qt)`` — and the
+    batcher never degrades, so serving stays bitwise-identical to a config
+    without this group. With a target set, the batcher picks a per-batch
+    beam tier from queue depth and the batch's remaining deadline budget:
+    tier 0 is always the full beam; deeper tiers trade recall for drain
+    rate instead of shedding whole queries.
+
+    ``tiers`` pins the degraded ladder explicitly as ``(beam, qt)`` pairs
+    with strictly descending beams, all narrower than the configured full
+    beam. Empty (default) auto-derives a halving ladder ``beam//2,
+    beam//4, …`` down to ``min_beam`` at the configured ``qt``. Every tier
+    must preserve the full-beam output panel width (the engine validates
+    against the tree geometry at build) so a degraded result is narrower
+    in *search*, never in *shape*.
+    """
+
+    target_p99_ms: Optional[float] = None  # None = adaptive tiering off
+    tiers: Tuple[Tuple[int, int], ...] = ()  # explicit (beam, qt) ladder
+    min_beam: int = 1                      # auto-ladder floor
+
+    def __post_init__(self) -> None:
+        if self.target_p99_ms is not None and self.target_p99_ms <= 0:
+            raise ValueError(
+                f"target_p99_ms must be positive; got {self.target_p99_ms}"
+            )
+        if self.min_beam < 1:
+            raise ValueError(f"min_beam must be >= 1; got {self.min_beam}")
+        prev = None
+        for pair in self.tiers:
+            if len(tuple(pair)) != 2:
+                raise ValueError(
+                    f"tiers entries are (beam, qt) pairs; got {pair!r}"
+                )
+            b, q = int(pair[0]), int(pair[1])
+            if b < 1 or q < 1:
+                raise ValueError(
+                    f"tier (beam={b}, qt={q}) must be positive"
+                )
+            if prev is not None and b >= prev:
+                raise ValueError(
+                    f"tier beams must be strictly descending; got "
+                    f"{[int(p[0]) for p in self.tiers]}"
+                )
+            prev = b
+
+
 _ADMISSION_FIELDS = frozenset(
     f.name for f in dataclasses.fields(AdmissionConfig)
 )
@@ -149,6 +204,9 @@ _FLEET_FIELDS = frozenset(
 )
 _QUANT_FIELDS = frozenset(
     f.name for f in dataclasses.fields(QuantConfig)
+)
+_SLO_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(SLOConfig)
 )
 
 
@@ -172,6 +230,7 @@ class ServeConfig:
     )
     fleet: FleetConfig = dataclasses.field(default_factory=FleetConfig)
     quant: QuantConfig = dataclasses.field(default_factory=QuantConfig)
+    slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
 
     def __init__(
         self,
@@ -187,6 +246,7 @@ class ServeConfig:
         partition: PartitionConfig | None = None,
         fleet: FleetConfig | None = None,
         quant: QuantConfig | None = None,
+        slo: SLOConfig | None = None,
         **flat: Any,
     ) -> None:
         self.beam = beam
@@ -201,12 +261,17 @@ class ServeConfig:
         self.partition = partition if partition is not None else PartitionConfig()
         self.fleet = fleet if fleet is not None else FleetConfig()
         self.quant = quant if quant is not None else QuantConfig()
+        self.slo = slo if slo is not None else SLOConfig()
         if flat:
             adm = {k: v for k, v in flat.items() if k in _ADMISSION_FIELDS}
             prt = {k: v for k, v in flat.items() if k in _PARTITION_FIELDS}
             flt = {k: v for k, v in flat.items() if k in _FLEET_FIELDS}
             qnt = {k: v for k, v in flat.items() if k in _QUANT_FIELDS}
-            unknown = set(flat) - set(adm) - set(prt) - set(flt) - set(qnt)
+            slk = {k: v for k, v in flat.items() if k in _SLO_FIELDS}
+            unknown = (
+                set(flat) - set(adm) - set(prt) - set(flt) - set(qnt)
+                - set(slk)
+            )
             if unknown:
                 raise TypeError(
                     f"ServeConfig got unexpected keyword argument(s) "
@@ -214,10 +279,10 @@ class ServeConfig:
                 )
             warnings.warn(
                 f"flat ServeConfig kwarg(s) "
-                f"{sorted(adm) + sorted(prt) + sorted(flt) + sorted(qnt)} "
+                f"{sorted(adm) + sorted(prt) + sorted(flt) + sorted(qnt) + sorted(slk)} "
                 "are deprecated; pass admission=AdmissionConfig(...) / "
                 "partition=PartitionConfig(...) / fleet=FleetConfig(...) / "
-                "quant=QuantConfig(...) instead",
+                "quant=QuantConfig(...) / slo=SLOConfig(...) instead",
                 DeprecationWarning,
                 stacklevel=2,
             )
@@ -230,6 +295,8 @@ class ServeConfig:
                 self.fleet = dataclasses.replace(self.fleet, **flt)
             if qnt:
                 self.quant = dataclasses.replace(self.quant, **qnt)
+            if slk:
+                self.slo = dataclasses.replace(self.slo, **slk)
 
     # -- flat read-side forwarding (pre-v1 call sites) ----------------------
     @property
@@ -271,3 +338,7 @@ class ServeConfig:
     @property
     def prune_keep(self) -> float:
         return self.quant.prune_keep
+
+    @property
+    def target_p99_ms(self) -> Optional[float]:
+        return self.slo.target_p99_ms

@@ -54,6 +54,7 @@ from repro.serving.config import (
     ServeConfig,
 )
 from repro.serving.metrics import LatencyStats
+from repro.serving.slo import BeamTier, resolve_tiers
 from repro.sparse.csr import CSR, rows_to_ell
 
 __all__ = [
@@ -108,6 +109,29 @@ class XMRServingEngine:
                     f"method={self.config.method!r}"
                 )
             self.method = "mscm_pallas_grouped_q"
+        # Adaptive beam-tier ladder (tier 0 = the configured full beam; a
+        # 1-tuple unless slo.target_p99_ms is set). Degraded tiers must
+        # reach the same result width as the full beam or QueryResult
+        # shapes would change per batch — validate against the *original*
+        # tree geometry before any quantize/partition reassignment below.
+        self.tiers: Tuple[BeamTier, ...] = resolve_tiers(self.config)
+        if len(self.tiers) > 1:
+            from repro.index.planner import reference_topk_width
+
+            c = self.config
+            full_w = reference_topk_width(
+                tree.n_cols, tree.branching, c.beam, c.topk
+            )
+            for t in self.tiers[1:]:
+                w = reference_topk_width(
+                    tree.n_cols, tree.branching, t.beam, c.topk
+                )
+                if w != full_w:
+                    raise ValueError(
+                        f"beam tier {t.beam} yields top-k width {w} != "
+                        f"full-beam width {full_w}; widen the tier or "
+                        f"raise slo min_beam"
+                    )
         self.label_perm = label_perm  # leaf position -> original label id
         self.stats = LatencyStats()
         self.mesh = None
@@ -204,43 +228,64 @@ class XMRServingEngine:
         """
         return max(_bucket(n, self.config.max_batch), self.config.shards)
 
-    def _run(self, xi: jax.Array, xv: jax.Array):
+    def bucket_key(self, n: int, tier: int = 0) -> Tuple[int, int]:
+        """jit-cache key for a dispatch: ``(bucket, beam_tier)``.
+
+        Every (power-of-two bucket, tier) pair compiles its own
+        ``_tree_infer`` entry — both coordinates are bounded static sets
+        (buckets by ``max_batch``, tiers by the SLO ladder), so the cache
+        stays XMR003-clean and ``warmup_buckets`` can enumerate it fully.
+        """
+        return (self.bucket_for(n), int(tier))
+
+    def _run(self, xi: jax.Array, xv: jax.Array, tier: int = 0):
         c = self.config
+        t = self.tiers[tier]
         if self.planner is not None:
             # Scatter-gather over the label partitions; the planner owns all
-            # device placement (per-partition batch sharding included).
+            # device placement (per-partition batch sharding included). The
+            # tier's beam/qt ride as per-call overrides only when degraded,
+            # so the tier-0 path (and its wire traffic) is byte-identical
+            # to an engine without an SLO configured.
+            if tier:
+                return self.planner.infer(xi, xv, beam=t.beam, qt=t.qt)
             return self.planner.infer(xi, xv)
         if self._batch_sharding is not None:
             xi = jax.device_put(xi, self._batch_sharding)
             xv = jax.device_put(xv, self._batch_sharding)
         return self.tree.infer(
-            xi, xv, beam=c.beam, topk=c.topk, method=self.method,
-            score_mode=c.score_mode, qt=c.qt,
+            xi, xv, beam=t.beam, topk=c.topk, method=self.method,
+            score_mode=c.score_mode, qt=t.qt,
         )
 
     # -- serving modes --------------------------------------------------
-    def warmup(self, d: int, batch_sizes: Sequence[int] = (1,)) -> None:
+    def warmup(self, d: int, batch_sizes: Sequence[int] = (1,),
+               tier: int = 0) -> None:
         for b in batch_sizes:
             bb = self.bucket_for(b)
             xi = jnp.full((bb, self.config.ell_width), d, jnp.int32)
             xv = jnp.zeros((bb, self.config.ell_width), jnp.float32)
-            s, l = self._run(xi, xv)
+            s, l = self._run(xi, xv, tier=tier)
             jax.block_until_ready((s, l))
 
-    def warmup_buckets(self, d: int, max_batch: int) -> None:
+    def warmup_buckets(self, d: int, max_batch: int,
+                       tiers: Optional[Sequence[int]] = None) -> None:
         """Warm every jit bucket a batcher capped at ``max_batch`` can form.
 
         Covers all power-of-two buckets up to ``bucket_for(max_batch)``
         inclusive — note the cap itself need not be a power of two (a
         size-triggered batch of 24 pads to bucket 32), and sharded engines
-        never form a bucket below ``shards``.
+        never form a bucket below ``shards``. With an SLO ladder, every
+        ``(bucket, tier)`` cache key is warmed (the full cross product is
+        bounded), so a degraded dispatch never pays a live compile.
         """
         sizes, b = [], self.config.shards or 1
         target = self.bucket_for(max_batch)
         while b <= target:
             sizes.append(b)
             b *= 2
-        self.warmup(d, sizes)
+        for tier in tiers if tiers is not None else range(len(self.tiers)):
+            self.warmup(d, sizes, tier=tier)
 
     def serve_batch(self, queries: CSR) -> Tuple[np.ndarray, np.ndarray]:
         """Batch setting: all queries at once (bucketed into max_batch chunks).
@@ -328,22 +373,26 @@ class XMRServingEngine:
             return None
         return getattr(self.planner, "last_degraded", None)
 
-    def measure_batch_seconds(self, batch: int, iters: int = 3) -> float:
+    def measure_batch_seconds(self, batch: int, iters: int = 3,
+                              tier: int = 0) -> float:
         """Median wall seconds for one ``batch``-sized dispatch (warmed).
 
         The drain-rate probe behind ``queue_depth="auto"``: sentinel (empty)
         queries traverse the same levels and sorts as real ones, so the
-        figure bounds the device-side service time per bucket.
+        figure bounds the device-side service time per bucket. With
+        ``tier > 0`` the probe runs at that beam tier — the same
+        measurement calibrates the :class:`~repro.serving.slo
+        .BeamTierPolicy` cost model.
         """
         bucket = self.bucket_for(batch)
         d = self.tree.d
         xi = jnp.full((bucket, self.config.ell_width), d, jnp.int32)
         xv = jnp.zeros((bucket, self.config.ell_width), jnp.float32)
-        jax.block_until_ready(self._run(xi, xv))  # warm this bucket
+        jax.block_until_ready(self._run(xi, xv, tier=tier))  # warm bucket
         times = []
         for _ in range(iters):
             t0 = time.perf_counter()
-            jax.block_until_ready(self._run(xi, xv))
+            jax.block_until_ready(self._run(xi, xv, tier=tier))
             times.append(time.perf_counter() - t0)
         return float(np.median(times))
 

@@ -445,7 +445,7 @@ class PartitionFleet(BeamTransport):
             for h in handles:
                 h.conn.lock.release()
 
-    def begin(self, x_idx, x_val, parent_ids, scores):
+    def begin(self, x_idx, x_val, parent_ids, scores, *, beam=None, qt=None):
         with self._state_lock:
             n = len(self.handles)
             if self.degraded_policy == "serve_partial":
@@ -455,8 +455,16 @@ class PartitionFleet(BeamTransport):
                 # fails the query typed instead of being silently skipped
                 pids = list(range(n))
             self._batch = (pids, [self.handles[p] for p in pids])
+        # Beam-tier overrides ride the begin header per batch; absent keys
+        # mean the loaded full settings, so a no-SLO coordinator's frames
+        # are byte-identical to the pre-tier wire format.
+        header: dict = {}
+        if beam is not None:
+            header["beam"] = int(beam)
+        if qt is not None:
+            header["qt"] = int(qt)
         return self._batch_exchange(
-            "begin", {}, [x_idx, x_val, parent_ids, scores]
+            "begin", header, [x_idx, x_val, parent_ids, scores]
         )
 
     def step(self, level, winner_ids):

@@ -117,7 +117,11 @@ class PartitionRunner:
                 branching=self.branching[self.level:],
                 d=d,
             )
-        # per-batch state
+        # per-batch state (the effective beam/qt default to the loaded
+        # full settings; begin() may narrow them for one batch — adaptive
+        # beam tiers are coordinator-chosen, the worker just obeys)
+        self._beam = self.beam
+        self._qt = self.qt
         self._xi = self._xv = self._xd = None
         self._spec_ids = self._spec_comb = None
 
@@ -133,7 +137,7 @@ class PartitionRunner:
 
     def _next_b(self, li: int) -> int:
         is_last = li == self.depth - 1
-        return min(self.topk if is_last else self.beam, self.n_cols[li])
+        return min(self.topk if is_last else self._beam, self.n_cols[li])
 
     def _owned(self, li, parent_ids, parent_scores):
         """One level's owned combined scores through the shared jit."""
@@ -147,7 +151,7 @@ class PartitionRunner:
             lay, self.branching[li], self.part.d,
             self._xi, self._xv, self._xd, parent_ids, parent_scores,
             jnp.int32(self.chunk_start * self._span(li)), jnp.int32(c_real),
-            method=self.method, score_mode=self.score_mode, qt=self.qt,
+            method=self.method, score_mode=self.score_mode, qt=self._qt,
         )
 
     def _speculate(self, li: int, beam_ids, beam_scores) -> None:
@@ -161,11 +165,17 @@ class PartitionRunner:
     def begin(
         self, xi: np.ndarray, xv: np.ndarray,
         parent_ids: np.ndarray, scores: np.ndarray,
+        *, beam: Optional[int] = None, qt: Optional[int] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         import jax.numpy as jnp
 
         from repro.index.planner import _scatter_dense, _spec_select
 
+        # Per-batch tier override: the coordinator's begin header may
+        # narrow beam/qt for this batch only; the loaded settings are the
+        # default and are restored by the next begin without an override.
+        self._beam = self.beam if beam is None else int(beam)
+        self._qt = self.qt if qt is None else int(qt)
         li = self.level
         self._xi = jnp.asarray(xi)
         self._xv = jnp.asarray(xv)
@@ -227,7 +237,10 @@ def _serve_connection(conn: socket.socket, state: dict) -> bool:
                 state["runner"] = PartitionRunner(header, arrays)
                 send_frame(conn, {"ok": True})
             elif op == "begin":
-                ids, sc = state["runner"].begin(*arrays)
+                ids, sc = state["runner"].begin(
+                    *arrays,
+                    beam=header.get("beam"), qt=header.get("qt"),
+                )
                 send_frame(conn, {"ok": True}, [ids, sc])
             elif op == "step":
                 ids, sc = state["runner"].step(int(header["level"]), arrays[0])

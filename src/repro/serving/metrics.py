@@ -118,6 +118,9 @@ class ServerMetrics:
     shed_by_priority: Dict[int, int] = dataclasses.field(default_factory=dict)
     deadline_missed: int = 0
     degraded_served: int = 0  # successful queries answered from a partial fleet
+    # Per-beam-tier completed-query counts (tier 0 = full beam); populated
+    # only by engines with an SLO ladder, so legacy summaries are unchanged.
+    tier_queries: Dict[int, int] = dataclasses.field(default_factory=dict)
     _t_first: float | None = None
     _t_last: float | None = None
     _lock: threading.Lock = dataclasses.field(
@@ -158,6 +161,7 @@ class ServerMetrics:
         partition_hits=None,
         stall_ms: float | None = None,
         cache_stats: dict | None = None,
+        tier: int = 0,
     ) -> None:
         """Record one dispatched micro-batch of len(t_enqueue) requests.
 
@@ -166,9 +170,13 @@ class ServerMetrics:
         ``stall_ms`` is the worker's blocked-on-device wall for this batch
         (partitioned dispatch only) and ``cache_stats`` the planner's
         *cumulative* hot-beam cache counters (latest snapshot wins).
+        ``tier`` is the beam tier the batch was dispatched at (0 = full).
         """
         compute = 1e3 * (t_done - t_dequeue)
         with self._lock:
+            self.tier_queries[tier] = (
+                self.tier_queries.get(tier, 0) + len(t_enqueue)
+            )
             if partition_hits is not None:
                 self.partition_hits.append(np.asarray(partition_hits))
             if stall_ms is not None:
@@ -246,6 +254,19 @@ class ServerMetrics:
             if self.degraded_served:
                 out["degraded_served"] = self.degraded_served
                 out["degraded_rate"] = self.degraded_served / offered
+            if any(t > 0 for t in self.tier_queries):
+                # Adaptive-SLO panel: how traffic split across the beam
+                # ladder, and what fraction was degraded below full beam
+                # (served, not shed — the knob the tier policy trades).
+                out["beam_tiers"] = {
+                    str(t): int(n)
+                    for t, n in sorted(self.tier_queries.items())
+                }
+                to_tier = sum(
+                    n for t, n in self.tier_queries.items() if t > 0
+                )
+                out["degraded_to_tier"] = int(to_tier)
+                out["degraded_to_tier_rate"] = to_tier / max(len(e2e), 1)
             if self.partition_hits:
                 hits = np.sum(self.partition_hits, axis=0).astype(float)
                 total = max(hits.sum(), 1.0)

@@ -112,9 +112,9 @@ def test_shed_requests_complete_under_sustained_overload(setup):
     engine, queries, ref_s, ref_l = setup
     real_run = engine._run
 
-    def slow_run(xi, xv):
+    def slow_run(xi, xv, tier=0):
         time.sleep(0.02)  # stretch device time so the queue must fill
-        return real_run(xi, xv)
+        return real_run(xi, xv, tier=tier)
 
     engine._run = slow_run
     try:
@@ -239,9 +239,9 @@ def test_expired_request_never_reaches_device(setup):
     calls = {"n": 0}
     real_run = eng._run
 
-    def counting_run(xi, xv):
+    def counting_run(xi, xv, tier=0):
         calls["n"] += 1
-        return real_run(xi, xv)
+        return real_run(xi, xv, tier=tier)
 
     eng._run = counting_run
     mb = MicroBatcher(eng, BatchPolicy(max_batch=16, max_wait_ms=1.0),
@@ -289,9 +289,9 @@ def test_stream_surfaces_shed_as_error_results(setup):
     engine, queries, *_ = setup
     real_run = engine._run
 
-    def slow_run(xi, xv):
+    def slow_run(xi, xv, tier=0):
         time.sleep(0.02)
-        return real_run(xi, xv)
+        return real_run(xi, xv, tier=tier)
 
     engine._run = slow_run
     try:

@@ -185,9 +185,9 @@ def test_gateway_maps_overloaded_to_429(small_setup):
     _, engine, queries, ref_s, ref_l = small_setup
     real_run = engine._run
 
-    def slow_run(xi, xv):
+    def slow_run(xi, xv, tier=0):
         time.sleep(0.05)  # stretch device time so the queue must fill
-        return real_run(xi, xv)
+        return real_run(xi, xv, tier=tier)
 
     engine._run = slow_run
     try:

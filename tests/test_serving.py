@@ -13,9 +13,14 @@ Pins the properties the async engine must not break:
 5. a dispatch fault fails only its own batch — every future resolves
    exactly once and the queue keeps serving;
 6. latency accounting stays honest: amortized batch averages never enter
-   the per-query percentile series.
+   the per-query percentile series;
+7. the ``queue_depth="auto"`` capacity probe is total — zero/slow drain
+   rates and a missing deadline all resolve to a sane bound — and
+   ``stop()`` during an in-flight probe waits it out instead of closing
+   the queue under it.
 """
 
+import threading
 import time
 
 import numpy as np
@@ -24,6 +29,7 @@ import pytest
 from repro.core import XMRTree
 from repro.core.tree import _tree_infer
 from repro.serving import (
+    AdmissionPolicy,
     BatchPolicy,
     MicroBatcher,
     ServeConfig,
@@ -321,11 +327,11 @@ def test_dispatch_fault_fails_only_its_batch(serving_setup):
     calls = {"n": 0}
     real_run = eng._run
 
-    def flaky_run(xi, xv):
+    def flaky_run(xi, xv, tier=0):
         calls["n"] += 1
         if calls["n"] == 2:
             raise RuntimeError("injected device fault")
-        return real_run(xi, xv)
+        return real_run(xi, xv, tier=tier)
 
     eng._run = flaky_run
     mb = MicroBatcher(eng, BatchPolicy(max_batch=16, max_wait_ms=5.0),
@@ -401,3 +407,103 @@ def test_poisson_stream_under_load(serving_setup):
     s = mb.metrics.summary()
     assert s["count"] == queries.shape[0]
     assert sum(mb.metrics.batch_sizes) == queries.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# 7. queue_depth="auto" capacity probe + lifecycle
+# ---------------------------------------------------------------------------
+
+def _auto_mb(engine, secs, monkeypatch, *, max_batch=16, deadline_ms=None):
+    """Batcher with a deterministic drain-rate probe (not started)."""
+    monkeypatch.setattr(
+        engine, "measure_batch_seconds",
+        lambda batch, iters=3, tier=0: secs,
+    )
+    return MicroBatcher(
+        engine,
+        BatchPolicy(max_batch=max_batch, max_wait_ms=2.0),
+        admission=AdmissionPolicy(
+            max_queue_depth="auto", deadline_ms=deadline_ms
+        ),
+    )
+
+
+def test_auto_depth_floors_at_max_batch_when_drain_is_slow(
+    serving_setup, monkeypatch
+):
+    """A near-zero drain rate must still admit one full bucket."""
+    engine, *_ = serving_setup
+    mb = _auto_mb(engine, 1e3, monkeypatch)  # 1000 s per bucket
+    assert mb._auto_queue_depth() == 16
+
+
+def test_auto_depth_zero_drain_time_is_finite(serving_setup, monkeypatch):
+    """A probe measuring ~0 s (clock granularity) must not divide by zero
+    or overflow — the bound resolves to a finite int."""
+    engine, *_ = serving_setup
+    mb = _auto_mb(engine, 0.0, monkeypatch)
+    depth = mb._auto_queue_depth()
+    assert isinstance(depth, int) and depth >= 16
+
+
+def test_auto_depth_deadline_none_uses_coalescing_budget(
+    serving_setup, monkeypatch
+):
+    """Without a per-request deadline the budget is ten deadline-trigger
+    windows (10 x max_wait_ms); with one, the deadline itself."""
+    engine, *_ = serving_setup
+    # 16 ms per 16-query bucket -> 1000 QPS drain rate
+    mb = _auto_mb(engine, 0.016, monkeypatch)
+    assert mb._auto_queue_depth() == 20   # 1000 QPS * 10 * 2 ms
+    mb = _auto_mb(engine, 0.016, monkeypatch, deadline_ms=50.0)
+    assert mb._auto_queue_depth() == 50   # 1000 QPS * 50 ms
+
+
+def test_auto_depth_sharded_bucket_floor(serving_setup, monkeypatch):
+    """shards > 1 raises the bucket floor (a bucket always splits evenly
+    over the mesh), which raises the measured drain rate with it."""
+    engine, *_ = serving_setup
+    mb = _auto_mb(engine, 0.008, monkeypatch, max_batch=2, deadline_ms=50.0)
+    assert engine.bucket_for(2) == 2
+    assert mb._auto_queue_depth() == 13   # 250 QPS * 50 ms, floored at 13
+    monkeypatch.setattr(engine.config, "shards", 8)
+    assert engine.bucket_for(2) == 8
+    assert mb._auto_queue_depth() == 50   # 1000 QPS * 50 ms
+
+
+def test_stop_during_auto_probe_waits_probe_out(serving_setup, monkeypatch):
+    """stop() racing start()'s capacity probe must neither deadlock nor
+    close the queue under the half-measured bucket: it waits for start to
+    finish, then observes and joins the freshly started worker."""
+    engine, *_ = serving_setup
+    probe_entered = threading.Event()
+    release_probe = threading.Event()
+
+    def blocking_probe(batch, iters=3, tier=0):
+        probe_entered.set()
+        assert release_probe.wait(timeout=30), "probe never released"
+        return 1e-3
+
+    monkeypatch.setattr(engine, "measure_batch_seconds", blocking_probe)
+    mb = MicroBatcher(
+        engine,
+        BatchPolicy(max_batch=16, max_wait_ms=2.0),
+        admission=AdmissionPolicy(max_queue_depth="auto"),
+        warmup_on_start=False,
+    )
+    starter = threading.Thread(target=mb.start)
+    starter.start()
+    assert probe_entered.wait(timeout=30)
+    stopper = threading.Thread(target=mb.stop)
+    stopper.start()
+    # stop() is parked on the lifecycle lock: the queue must still be open
+    # (closing it now would strand the probe's bucket half-measured).
+    time.sleep(0.05)
+    assert not mb.queue.closed
+    release_probe.set()
+    starter.join(timeout=30)
+    stopper.join(timeout=30)
+    assert not starter.is_alive() and not stopper.is_alive()
+    # start completed its probe (bound resolved), stop joined the worker
+    assert isinstance(mb.admission.max_queue_depth, int)
+    assert mb.queue.closed and mb._thread is None

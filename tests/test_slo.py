@@ -1,0 +1,431 @@
+"""Latency-SLO adaptive beam tiers: ladder, policy, and at-tier exactness.
+
+Pins the contracts the adaptive serving tier must not break:
+1. the tier ladder resolves deterministically from ``SLOConfig`` (explicit
+   pairs validated, auto-halving down to ``min_beam``, 1-tuple when off)
+   and the engine refuses ladders whose degraded tiers would change the
+   result panel width;
+2. a degraded tier is *exact at that beam*: ``engine._run(tier=k)`` is
+   bitwise the unpartitioned ``tree.infer`` at the tier's beam/qt, and the
+   partitioned planner's per-call ``beam``/``qt`` overrides match it too —
+   in ``"level"``, ``"pipelined"``, and PartitionRunner-transport dispatch;
+3. tier 0 stays bitwise-identical to an engine without an SLO (no override
+   kwargs even reach the transport — the wire format is unchanged);
+4. the ``BeamTierPolicy`` selector degrades with backlog/budget pressure
+   and never sheds (no budget still returns the deepest tier);
+5. ``QueryResult.beam_tier`` rides the v1 wire only when nonzero, and the
+   micro-batcher stamps it end to end (futures, metrics).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import XMRTree
+from repro.index import ScatterGatherPlanner, partition_tree
+from repro.serving import (
+    BatchPolicy,
+    MicroBatcher,
+    Query,
+    QueryResult,
+    ServeConfig,
+    SLOConfig,
+    XMRServingEngine,
+)
+from repro.serving.fleet.launcher import partition_payload
+from repro.serving.fleet.worker import PartitionRunner
+from repro.serving.slo import BeamTier, BeamTierPolicy, resolve_tiers
+from repro.sparse import random_sparse_csr
+from tests.conftest import make_tree_weights
+
+METHOD = "mscm_dense"
+
+
+def _bits(a) -> np.ndarray:
+    return np.asarray(a).view(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# 1. config validation + ladder resolution
+# ---------------------------------------------------------------------------
+
+def test_slo_config_validation():
+    with pytest.raises(ValueError):
+        SLOConfig(target_p99_ms=0.0)
+    with pytest.raises(ValueError):
+        SLOConfig(target_p99_ms=-3.0)
+    with pytest.raises(ValueError):
+        SLOConfig(min_beam=0)
+    with pytest.raises(ValueError):
+        SLOConfig(tiers=((0, 8),))          # non-positive beam
+    with pytest.raises(ValueError):
+        SLOConfig(tiers=((4, 0),))          # non-positive qt
+    with pytest.raises(ValueError):
+        SLOConfig(tiers=((2, 8), (4, 8)))   # beams must strictly descend
+    # valid forms
+    SLOConfig()
+    SLOConfig(target_p99_ms=5.0)
+    SLOConfig(target_p99_ms=5.0, tiers=((4, 8), (2, 8)))
+
+
+def test_resolve_tiers_disabled_is_full_only():
+    cfg = ServeConfig(beam=10, qt=8)
+    assert resolve_tiers(cfg) == (BeamTier(10, 8),)
+
+
+def test_resolve_tiers_auto_halving_ladder():
+    cfg = ServeConfig(beam=10, qt=8, slo=SLOConfig(target_p99_ms=5.0))
+    assert resolve_tiers(cfg) == (
+        BeamTier(10, 8), BeamTier(5, 8), BeamTier(2, 8), BeamTier(1, 8)
+    )
+    cfg = ServeConfig(
+        beam=10, qt=8, slo=SLOConfig(target_p99_ms=5.0, min_beam=4)
+    )
+    assert resolve_tiers(cfg) == (BeamTier(10, 8), BeamTier(5, 8))
+
+
+def test_resolve_tiers_explicit_ladder():
+    cfg = ServeConfig(
+        beam=10, qt=8,
+        slo=SLOConfig(target_p99_ms=5.0, tiers=((6, 8), (3, 4))),
+    )
+    assert resolve_tiers(cfg) == (
+        BeamTier(10, 8), BeamTier(6, 8), BeamTier(3, 4)
+    )
+    # an explicit tier at least as wide as the full beam is a config error
+    cfg = ServeConfig(
+        beam=10, qt=8, slo=SLOConfig(target_p99_ms=5.0, tiers=((10, 8),))
+    )
+    with pytest.raises(ValueError, match="narrower"):
+        resolve_tiers(cfg)
+
+
+def test_engine_rejects_width_changing_tier():
+    """A tier whose beam shrinks the result panel must be refused at build.
+
+    Geometry: n_cols (4, 16), branching (4, 4), topk=10. Full beam 10
+    reaches width min(10, 16, 4*4) = 10; tier beam 2 reaches
+    min(10, 16, 2*4) = 8 != 10 — per-batch result shapes would differ.
+    """
+    rng = np.random.default_rng(3)
+    ws = make_tree_weights(rng, 48, [4, 16], 4)
+    tree = XMRTree.from_weight_matrices(ws, 4)
+    cfg = ServeConfig(
+        beam=10, topk=10, method=METHOD, ell_width=16,
+        slo=SLOConfig(target_p99_ms=50.0, tiers=((2, 8),)),
+    )
+    with pytest.raises(ValueError, match="width"):
+        XMRServingEngine(tree, cfg)
+    # beam 4 keeps width 10 (min(10, 16, 4*4)); accepted
+    ok = ServeConfig(
+        beam=10, topk=10, method=METHOD, ell_width=16,
+        slo=SLOConfig(target_p99_ms=50.0, tiers=((4, 8),)),
+    )
+    eng = XMRServingEngine(tree, ok)
+    assert eng.tiers == (BeamTier(10, 8), BeamTier(4, 8))
+
+
+# ---------------------------------------------------------------------------
+# 2. BeamTierPolicy selection
+# ---------------------------------------------------------------------------
+
+def _policy(costs, target_ms=10.0, bucket=16):
+    tiers = tuple(BeamTier(8 >> k, 8) for k in range(len(costs)))
+    pol = BeamTierPolicy(tiers, target_ms=target_ms, bucket=bucket)
+    it = iter(costs)
+    return pol.calibrate(lambda k: next(it))
+
+
+def test_policy_uncalibrated_always_full():
+    pol = BeamTierPolicy(
+        (BeamTier(8, 8), BeamTier(4, 8)), target_ms=10.0, bucket=16
+    )
+    assert not pol.calibrated
+    assert pol.select(queue_depth=10_000, budget_ms=0.01) == 0
+
+
+def test_policy_select_degrades_with_backlog():
+    pol = _policy([4.0, 2.0, 1.0], target_ms=10.0, bucket=16)
+    # empty queue: one batch at full beam fits 10ms
+    assert pol.select(queue_depth=0, budget_ms=None) == 0
+    # 2 buckets queued ahead -> 3 batches: 3*4 > 10, 3*2 <= 10 -> tier 1
+    assert pol.select(queue_depth=32, budget_ms=None) == 1
+    # deep backlog (6 batches: 6*2 > 10, 6*1 <= 10): only tier 2 fits
+    assert pol.select(queue_depth=80, budget_ms=None) == 2
+    # nothing fits: degrade to the deepest tier, never shed
+    assert pol.select(queue_depth=10_000, budget_ms=None) == 2
+    assert pol.select(queue_depth=0, budget_ms=0.0) == 2
+    assert pol.select(queue_depth=0, budget_ms=-5.0) == 2
+
+
+def test_policy_budget_tightens_but_never_exceeds_target():
+    pol = _policy([4.0, 2.0, 1.0], target_ms=10.0, bucket=16)
+    # a per-request budget below the target bites
+    assert pol.select(queue_depth=0, budget_ms=3.0) == 1
+    # a budget above the target is clamped to the target
+    assert pol.select(queue_depth=32, budget_ms=1e9) == 1
+
+
+def test_policy_calibration_clamps_monotone():
+    # probe jitter measuring a narrower beam as slower must be clamped
+    pol = _policy([2.0, 3.0, 1.0])
+    assert pol.cost_ms == [2.0, 2.0, 1.0]
+
+
+def test_policy_constructor_validation():
+    with pytest.raises(ValueError):
+        BeamTierPolicy((), target_ms=10.0, bucket=16)
+    with pytest.raises(ValueError):
+        BeamTierPolicy((BeamTier(8, 8),), target_ms=0.0, bucket=16)
+    with pytest.raises(ValueError):
+        BeamTierPolicy((BeamTier(8, 8),), target_ms=10.0, bucket=0)
+
+
+# ---------------------------------------------------------------------------
+# 3. at-tier bitwise exactness (in-process, partitioned, transport)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tier_world():
+    rng = np.random.default_rng(11)
+    d, B = 128, 4
+    ws = make_tree_weights(rng, d, [4, 16, 64], B)
+    tree = XMRTree.from_weight_matrices(ws, B)
+    cfg = ServeConfig(
+        beam=4, topk=8, method=METHOD, ell_width=24, max_batch=16,
+        slo=SLOConfig(target_p99_ms=100.0, tiers=((2, 8),)),
+    )
+    engine = XMRServingEngine(tree, cfg)
+    queries = random_sparse_csr(16, d, 12, rng)
+    xi, xv = engine.marshal_rows(queries, np.arange(16), 16)
+    return tree, cfg, engine, xi, xv
+
+
+def _tree_ref(tree, xi, xv, beam, qt=8):
+    return tree.infer(
+        xi, xv, beam=beam, topk=8, method=METHOD, score_mode="prod", qt=qt
+    )
+
+
+def test_engine_tier_dispatch_bitwise_exact_at_tier(tier_world):
+    tree, cfg, engine, xi, xv = tier_world
+    s0, l0 = engine._run(xi, xv, tier=0)
+    ref_s, ref_l = _tree_ref(tree, xi, xv, beam=4)
+    np.testing.assert_array_equal(_bits(s0), _bits(ref_s))
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(ref_l))
+    s1, l1 = engine._run(xi, xv, tier=1)
+    deg_s, deg_l = _tree_ref(tree, xi, xv, beam=2)
+    np.testing.assert_array_equal(_bits(s1), _bits(deg_s))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(deg_l))
+    # same panel width at every tier (the build-time validation's promise)
+    assert np.asarray(s0).shape == np.asarray(s1).shape
+
+
+def test_tier0_bitwise_identical_to_no_slo_engine(tier_world):
+    tree, cfg, engine, xi, xv = tier_world
+    plain = XMRServingEngine(
+        tree,
+        ServeConfig(beam=4, topk=8, method=METHOD, ell_width=24, max_batch=16),
+    )
+    assert len(plain.tiers) == 1
+    s_a, l_a = engine._run(xi, xv, tier=0)
+    s_b, l_b = plain._run(xi, xv)
+    np.testing.assert_array_equal(_bits(s_a), _bits(s_b))
+    np.testing.assert_array_equal(np.asarray(l_a), np.asarray(l_b))
+
+
+def test_degraded_tier_composes_with_quant_tier(tier_world):
+    # Storage tier (QuantConfig) and beam tier (SLOConfig) are orthogonal:
+    # a degraded tier on a quantized engine is bitwise the quantized
+    # engine's own result at the narrower beam — the two error sources
+    # never compound within a tier (the README's composition claim).
+    from repro.serving import QuantConfig
+
+    tree, cfg, engine, xi, xv = tier_world
+    slo = ServeConfig(
+        beam=4, topk=8, method="auto", ell_width=24, max_batch=16,
+        quant=QuantConfig(tier="int8"),
+        slo=SLOConfig(target_p99_ms=100.0, tiers=((2, 8),)),
+    )
+    q_slo = XMRServingEngine(tree, slo)
+    for tier, beam in ((0, 4), (1, 2)):
+        plain = XMRServingEngine(
+            tree,
+            ServeConfig(beam=beam, topk=8, method="auto", ell_width=24,
+                        max_batch=16, quant=QuantConfig(tier="int8")),
+        )
+        s_a, l_a = q_slo._run(xi, xv, tier=tier)
+        s_b, l_b = plain._run(xi, xv)
+        np.testing.assert_array_equal(_bits(s_a), _bits(s_b))
+        np.testing.assert_array_equal(np.asarray(l_a), np.asarray(l_b))
+
+
+@pytest.mark.parametrize("sync", ["level", "pipelined"])
+def test_planner_beam_override_bitwise_exact(tier_world, sync):
+    tree, cfg, engine, xi, xv = tier_world
+    idx = partition_tree(tree, 2, level=1)
+    pl = ScatterGatherPlanner(
+        idx, beam=4, topk=8, method=METHOD, qt=8, sync=sync
+    )
+    deg_s, deg_l = _tree_ref(tree, xi, xv, beam=2)
+    s, l = pl.infer(xi, xv, beam=2, qt=8)
+    np.testing.assert_array_equal(_bits(s), _bits(deg_s))
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(deg_l))
+    # the override is per-call: the next default call is full-beam again
+    ref_s, ref_l = _tree_ref(tree, xi, xv, beam=4)
+    s, l = pl.infer(xi, xv)
+    np.testing.assert_array_equal(_bits(s), _bits(ref_s))
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(ref_l))
+
+
+class _HeaderSpyTransport:
+    """PartitionRunner-backed transport recording begin's tier overrides."""
+
+    def __init__(self, runners):
+        self._runners = runners
+        self.begin_overrides = []
+
+    @property
+    def n_partitions(self):
+        return len(self._runners)
+
+    def down_partitions(self):
+        return []
+
+    def begin(self, x_idx, x_val, parent_ids, scores, *, beam=None, qt=None):
+        self.begin_overrides.append((beam, qt))
+        return [
+            r.begin(x_idx, x_val, parent_ids, scores, beam=beam, qt=qt)
+            for r in self._runners
+        ]
+
+    def step(self, level, winner_ids):
+        return [r.step(level, winner_ids) for r in self._runners]
+
+
+def test_transport_tier_override_bitwise_exact_and_tier0_headerless(
+    tier_world,
+):
+    tree, cfg, engine, xi, xv = tier_world
+    idx = partition_tree(tree, 2, level=1)
+    runners = [
+        PartitionRunner(*partition_payload(
+            idx, pid, beam=4, topk=8, method=METHOD
+        ))
+        for pid in range(2)
+    ]
+    spy = _HeaderSpyTransport(runners)
+    pl = ScatterGatherPlanner(
+        idx, beam=4, topk=8, method=METHOD, qt=8, sync="pipelined",
+        transport=spy,
+    )
+    # full-beam call: no override kwargs reach the transport (wire parity)
+    ref_s, ref_l = _tree_ref(tree, xi, xv, beam=4)
+    s, l = pl.infer(xi, xv)
+    assert spy.begin_overrides == [(None, None)]
+    np.testing.assert_array_equal(_bits(s), _bits(ref_s))
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(ref_l))
+    # degraded-tier call: override rides begin, results exact at that beam
+    deg_s, deg_l = _tree_ref(tree, xi, xv, beam=2)
+    s, l = pl.infer(xi, xv, beam=2)
+    assert spy.begin_overrides[-1] == (2, None)
+    np.testing.assert_array_equal(_bits(s), _bits(deg_s))
+    np.testing.assert_array_equal(np.asarray(l), np.asarray(deg_l))
+    # and the next full-beam call restores the loaded settings
+    s, l = pl.infer(xi, xv)
+    assert spy.begin_overrides[-1] == (None, None)
+    np.testing.assert_array_equal(_bits(s), _bits(ref_s))
+
+
+# ---------------------------------------------------------------------------
+# 4. wire schema
+# ---------------------------------------------------------------------------
+
+def test_beam_tier_wire_roundtrip():
+    r = QueryResult(
+        qid=7, ids=np.arange(3, dtype=np.int32),
+        scores=np.ones(3, np.float32), beam_tier=2,
+    )
+    doc = r.to_wire()
+    assert doc["beam_tier"] == 2
+    back = QueryResult.from_wire(doc)
+    assert back.beam_tier == 2 and back.ok
+
+
+def test_beam_tier_zero_absent_from_wire():
+    r = QueryResult(
+        qid=1, ids=np.arange(3, dtype=np.int32),
+        scores=np.ones(3, np.float32),
+    )
+    doc = r.to_wire()
+    assert "beam_tier" not in doc  # tier-0 wire is byte-identical to pre-SLO
+    assert QueryResult.from_wire(doc).beam_tier == 0
+
+
+# ---------------------------------------------------------------------------
+# 5. micro-batcher end to end
+# ---------------------------------------------------------------------------
+
+def test_batcher_selects_degraded_tier_under_pressure(tier_world, monkeypatch):
+    """Pre-filled queue + costs that cannot meet the target at full beam
+    force the policy off tier 0; results carry ``beam_tier`` and the
+    metrics summary grows the per-tier panel."""
+    tree, cfg, engine, xi, xv = tier_world
+    rng = np.random.default_rng(5)
+    queries = random_sparse_csr(48, 128, 12, rng)
+
+    # Deterministic calibration: full beam is too slow for the target with
+    # any backlog, tier 1 always fits.
+    costs = {0: 80.0, 1: 0.01}
+    monkeypatch.setattr(
+        engine, "measure_batch_seconds",
+        lambda batch, iters=3, tier=0: 1e-3 * costs[tier],
+    )
+    mb = MicroBatcher(engine, BatchPolicy(max_batch=16, max_wait_ms=2.0))
+    futs = []
+    for i in range(queries.shape[0]):
+        ri, rv = queries.row(i)
+        futs.append(mb.submit(Query(idx=ri, val=rv, qid=i)))
+    mb.start()
+    res = [f.result(timeout=60) for f in futs]
+    mb.stop()
+    assert all(r.ok for r in res)
+    assert mb.tier_policy is not None and mb.tier_policy.calibrated
+    tiers = {r.beam_tier for r in res}
+    assert 1 in tiers  # backlogged batches degraded instead of shedding
+    summary = mb.metrics.summary()
+    assert summary["shed"] == 0
+    assert summary["degraded_to_tier"] > 0
+    assert 0.0 < summary["degraded_to_tier_rate"] <= 1.0
+    assert set(summary["beam_tiers"]) <= {"0", "1"}
+
+
+def test_batcher_full_beam_results_identical_with_and_without_slo(
+    tier_world, monkeypatch
+):
+    """With ample budget the SLO engine serves tier 0 — results are bitwise
+    the same as a batcher over a no-SLO engine."""
+    tree, cfg, engine, xi, xv = tier_world
+    rng = np.random.default_rng(9)
+    queries = random_sparse_csr(12, 128, 12, rng)
+    # Cheap calibrated costs so every batch fits the target at full beam.
+    monkeypatch.setattr(
+        engine, "measure_batch_seconds",
+        lambda batch, iters=3, tier=0: 1e-6,
+    )
+    plain = XMRServingEngine(
+        tree,
+        ServeConfig(beam=4, topk=8, method=METHOD, ell_width=24, max_batch=16),
+    )
+    out = {}
+    for name, eng in (("slo", engine), ("plain", plain)):
+        mb = MicroBatcher(eng, BatchPolicy(max_batch=16, max_wait_ms=2.0))
+        mb.start()
+        futs = mb.submit_csr(queries)
+        out[name] = [f.result(timeout=60) for f in futs]
+        mb.stop()
+    for (s_a, l_a), (s_b, l_b) in zip(out["slo"], out["plain"]):
+        np.testing.assert_array_equal(_bits(s_a), _bits(s_b))
+        np.testing.assert_array_equal(np.asarray(l_a), np.asarray(l_b))
